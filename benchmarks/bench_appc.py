@@ -1,0 +1,45 @@
+"""Paper App. C (Table 2/3): topology-insensitivity horizons predicted by
+Lian et al. (2017) and Pu et al. (2019), evaluated on our problems."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import analysis as AN
+from repro.core import topology as T
+
+
+def _lipschitz_estimate(problem, n_pairs=50, seed=0):
+    arrays, labels, params0, loss, name = problem
+    b = tuple(jnp.asarray(a[:64]) for a in arrays)
+    g = jax.jit(jax.grad(loss))
+    rng = jax.random.PRNGKey(seed)
+    leaves, tdef = jax.tree.flatten(params0)
+    L = 0.0
+    for i in range(n_pairs):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        p1 = tdef.unflatten([x + 0.5 * jax.random.normal(k1, x.shape) for x in leaves])
+        p2 = tdef.unflatten([x + 0.5 * jax.random.normal(k2, x.shape) for x in leaves])
+        g1, g2 = g(p1, b), g(p2, b)
+        dg = np.sqrt(sum(float(jnp.sum((a - c) ** 2))
+                         for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2))))
+        dw = np.sqrt(sum(float(jnp.sum((a - c) ** 2))
+                         for a, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))))
+        L = max(L, dg / max(dw, 1e-12))
+    return L
+
+
+def run() -> list[dict]:
+    rows = []
+    ring = T.undirected_ring(16)
+    for make in (common.problem_linear, common.problem_classifier):
+        problem = make()
+        L = _lipschitz_estimate(problem)
+        kl = AN.lian_horizon(L=L, M=16, sigma2=1.0, f0=2.3, lam2=ring.lambda2)
+        klp = AN.pu_horizon(L=L, M=16, mu=1.0, lam2=ring.lambda2)
+        rows.append({"bench": "appC", "problem": problem[-1],
+                     "L_hat": L, "K_lian": kl, "K_pu": klp})
+    common.save_json("appc", rows)
+    return rows

@@ -1,0 +1,42 @@
+"""Paper Fig. 5: straggler mitigation — iterations/time, loss-vs-iteration,
+loss-vs-wallclock by degree, under Spark-like and ASCI-Q-like compute-time
+distributions with zero communication delay."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import straggler as S
+from repro.core import topology as T
+
+M_ = 16
+DEGREES = [2, 4, 8, 15]
+K = 400
+
+
+def _topo(d):
+    return T.clique(M_) if d >= M_ - 1 else (
+        T.undirected_ring(M_) if d == 2 else T.ring_lattice(M_, d))
+
+
+def run() -> list[dict]:
+    rows = []
+    problem = common.problem_classifier()
+    loss_by_degree = {}
+    for d in DEGREES:
+        losses, _, _ = common.run_dsm(problem, _topo(d), steps=200, lr=0.5)
+        loss_by_degree[d] = losses
+    for dist_name, sampler in (("spark", S.spark_like()), ("asciq", S.asciq_like())):
+        for d in DEGREES:
+            sim = S.simulate(_topo(d), K, sampler, seed=7)
+            t, f = S.loss_vs_time(loss_by_degree[d], sim)
+            target = float(min(c[-20:].mean() for c in loss_by_degree.values()) + 0.05)
+            hit = np.nonzero(f <= target)[0]
+            rows.append({
+                "bench": "fig5", "dist": dist_name, "degree": d,
+                "throughput_it_per_time": sim.throughput,
+                "final_loss": float(f[-1]),
+                "time_to_target": float(t[hit[0]]) if len(hit) else float("inf"),
+            })
+    common.save_json("fig5", rows)
+    return rows

@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: wall-time of the jitted XLA twins on CPU (the
+Pallas kernels target TPU; interpret mode is correctness-only, so we time the
+lowering-equivalent XLA paths) + HBM-traffic model of the gossip_mix fusion."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.gossip_mix.ref import gossip_mix_reference
+from repro.models.attention import blockwise_attention, dense_attention
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # gossip mix: fused (single pass) vs unfused axpy chain — HBM traffic model
+    for n, k in ((1 << 20, 2), (1 << 22, 2), (1 << 20, 4)):
+        ks = jax.random.split(key, 4)
+        w = jax.random.normal(ks[0], (n,))
+        nb = jax.random.normal(ks[1], (k, n))
+        wt = jax.nn.softmax(jax.random.normal(ks[2], (k + 1,)))
+        up = jax.random.normal(ks[3], (n,))
+
+        fused = jax.jit(lambda w, nb, up: gossip_mix_reference(w, nb, wt, up, 0.1))
+
+        def unfused(w, nb, up):
+            acc = w * wt[0]
+            for d in range(k):
+                acc = acc + nb[d] * wt[d + 1]   # separate axpy passes
+            return acc - 0.1 * up
+        unfused_j = jax.jit(unfused)
+
+        t_f = _time(fused, w, nb, up)
+        t_u = _time(unfused_j, w, nb, up)
+        bytes_fused = (k + 2 + 1) * n * 4
+        bytes_unfused = (2 * (k + 2) + (k + 2)) * n * 4
+        rows.append({"bench": "kernel_gossip_mix", "n": n, "k_neighbors": k,
+                     "us_fused": t_f, "us_unfused_chain": t_u,
+                     "model_traffic_ratio": bytes_unfused / bytes_fused})
+    # attention: blockwise (flash algorithm) vs dense at growing seq
+    for L in (512, 1024, 2048):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, L, 4, 64))
+        kk = jax.random.normal(ks[1], (1, L, 2, 64))
+        v = jax.random.normal(ks[2], (1, L, 2, 64))
+        t_block = _time(jax.jit(lambda q, k, v: blockwise_attention(
+            q, k, v, 0, causal=True, q_chunk=512, kv_chunk=512)), q, kk, v)
+        t_dense = _time(jax.jit(lambda q, k, v: dense_attention(
+            q, k, v, jnp.arange(L), jnp.arange(L), causal=True)), q, kk, v)
+        rows.append({"bench": "kernel_attention", "seq": L,
+                     "us_blockwise": t_block, "us_dense": t_dense,
+                     "score_bytes_dense": 4 * L * L * 4,
+                     "score_bytes_blockwise": 4 * 512 * 512 * 4})
+    common.save_json("kernels", rows)
+    return rows

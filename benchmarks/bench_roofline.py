@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json):
+per (arch × shape × mesh): the three terms, bottleneck, useful-FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if not d.get("ok") or d.get("roofline") is None:
+            rows.append({"bench": "roofline", "combo": os.path.basename(path),
+                         "ok": False})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "bench": "roofline",
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "mode": d["mode"], "ok": True,
+            "t_compute_s": r["t_compute_s"], "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "compile_s": d["compile_s"],
+        })
+    common.save_json("roofline", rows)
+    return rows

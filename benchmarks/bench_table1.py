@@ -1,0 +1,58 @@
+"""Paper Table 1: empirical E, E_sp, H, α, β vs the Prop. 3.3 prediction β̂,
+on the three problem families × (random split, split-by-label)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import analysis as AN
+from repro.core import topology as T
+from repro.data import WorkerBatcher, pad_to_equal, random_split, split_by_label
+
+M_ = 8
+B = 32
+
+
+def _grad_samples(problem, split, n_samples=8, seed=0):
+    arrays, labels, params0, loss, name = problem
+    n = len(arrays[0])
+    parts = pad_to_equal(
+        random_split(n, M_, seed=seed) if split == "random"
+        else split_by_label(labels, M_, seed=seed))
+    batcher = WorkerBatcher(arrays, parts, batch_size=B, seed=seed)
+    grad = jax.jit(jax.vmap(jax.grad(loss), in_axes=(None, 0)))
+    Gs = []
+    for _ in range(n_samples):
+        b = tuple(jnp.asarray(x) for x in batcher.next())
+        g = grad(params0, b)
+        flat = np.concatenate(
+            [np.asarray(x).reshape(M_, -1) for x in jax.tree.leaves(g)], axis=1).T
+        Gs.append(flat)
+    return Gs
+
+
+def run() -> list[dict]:
+    topo = T.undirected_ring(M_)
+    rows = []
+    for make in (common.problem_linear, common.problem_classifier, common.problem_lm):
+        problem = make()
+        name = problem[-1]
+        for split in ("random", "by_label"):
+            Gs = _grad_samples(problem, split)
+            c = AN.estimate_constants(Gs, topo)
+            # Prop 3.3 / eq. 12 prediction from per-sample statistics
+            S = len(problem[0][0])
+            sigma2_hat = c.E_sp / M_ * B * (S - 1) / max(S - B, 1)  # invert eq.11 (C=1)
+            pred = AN.prop33_moments(M=M_, S=S, B=B, C=1,
+                                     grad_norm2=max((c.H ** 2) / M_ - (M_ - 1) / (S - 1) * sigma2_hat, 1e-12),
+                                     sigma2=sigma2_hat, alpha=c.alpha)
+            rows.append({
+                "bench": "table1", "problem": name, "split": split,
+                "sqrt_E_over_Esp": c.ratio_E_Esp, "sqrt_E_over_H": c.ratio_E_H,
+                "inv_alpha": 1.0 / c.alpha, "beta": c.beta,
+                "beta_hat": pred.beta_hat,
+            })
+    common.save_json("table1", rows)
+    return rows

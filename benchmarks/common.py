@@ -1,0 +1,120 @@
+"""Shared benchmark plumbing: small problems mirroring the paper's three
+(convex regression / classification net / LM), timed runs, CSV output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.decentralized import init_state, make_train_step, replicate_for_workers
+from repro.core.gossip import GossipSpec
+from repro.data import WorkerBatcher, pad_to_equal, random_split, split_by_label
+from repro.optim import momentum_sgd, sgd
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save_json(name: str, payload: Any) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# The three ML problems of §4, in CPU-tractable synthetic form
+# ---------------------------------------------------------------------------
+
+
+def problem_linear(S=2048, n=64, seed=0):
+    from repro.data import linear_regression_data
+    X, y, _ = linear_regression_data(S=S, n=n, seed=seed)
+
+    def loss(params, batch):
+        bx, by = batch
+        pred = bx @ params["w"]
+        return jnp.mean((pred - by) ** 2)
+
+    params0 = {"w": jnp.zeros(n)}
+    # pseudo-labels for by-label splits: quantile bins of the first feature
+    labels = np.digitize(X[:, 0], np.quantile(X[:, 0], np.linspace(0, 1, 17)[1:-1]))
+    labels = labels.astype(np.int32)
+    return (X, y), labels, params0, loss, "linear-regr(CT-analogue)"
+
+
+def problem_classifier(S=2048, n=32, n_classes=10, seed=0):
+    from repro.data import classification_data
+    X, y = classification_data(S=S, n=n, n_classes=n_classes, seed=seed)
+
+    def loss(params, batch):
+        bx, by = batch
+        h = jnp.tanh(bx @ params["W1"] + params["b1"])
+        logits = h @ params["W2"] + params["b2"]
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, by[:, None], -1))
+
+    k = jax.random.PRNGKey(seed)
+    hdim = 32
+    params0 = {
+        "W1": jax.random.normal(k, (n, hdim)) * 0.1, "b1": jnp.zeros(hdim),
+        "W2": jnp.zeros((hdim, n_classes)), "b2": jnp.zeros(n_classes),
+    }
+    return (X, y), y, params0, loss, "mlp(MNIST-analogue)"
+
+
+def problem_lm(S=512, seq=32, vocab=256, seed=0):
+    from repro.configs import get_config
+    from repro.data import token_stream
+    from repro.models import model as Mo
+    import dataclasses
+    toks, labels = token_stream(S=S, seq_len=seq, vocab=vocab, seed=seed)
+    cfg = get_config("granite-3-2b", reduced=True)
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, n_heads=2,
+                              n_kv_heads=2, head_dim=32, d_ff=128,
+                              vocab_size=vocab)
+    params0 = Mo.init(jax.random.PRNGKey(seed), cfg)
+
+    def loss(params, batch):
+        return Mo.loss_fn(params, cfg, {"tokens": batch[0]})
+
+    return (toks,), labels, params0, loss, "tiny-transformer(CIFAR-analogue)"
+
+
+def run_dsm(problem, topo: T.Topology, *, steps=150, lr=0.3, B=16, seed=0,
+            split="random", momentum=0.0, collect_grad_stats=False):
+    """Train with DSM on a topology; returns global-loss curve + stats."""
+    (arrays, labels, params0, loss, name) = problem
+    M_ = topo.M
+    n = len(arrays[0])
+    parts = pad_to_equal(
+        random_split(n, M_, seed=seed) if split == "random"
+        else split_by_label(labels, M_, seed=seed))
+    batcher = WorkerBatcher(arrays, parts, batch_size=B, seed=seed)
+    opt = momentum_sgd(lr, momentum) if momentum else sgd(lr)
+    spec = GossipSpec(topology=topo, backend="einsum")
+    step = jax.jit(make_train_step(loss, opt, gossip=spec, mode="gossip"))
+    state = init_state(replicate_for_workers(params0, M_), opt)
+    full = tuple(jnp.asarray(a) for a in arrays)
+    gl = jax.jit(lambda p: loss(jax.tree.map(lambda v: v.mean(0), p), full))
+    losses, stats = [], []
+    for _ in range(steps):
+        b = tuple(jnp.asarray(x) for x in batcher.next())
+        state, m = step(state, b)
+        losses.append(float(gl(state.params)))
+        if collect_grad_stats:
+            stats.append((float(m.grad_energy), float(m.grad_spread),
+                          float(m.mean_grad_norm)))
+    return np.asarray(losses), stats, parts

@@ -1,0 +1,54 @@
+"""Benchmark driver: one bench per paper table/figure + the roofline table.
+
+Prints ``bench,name,us_per_call,derived`` CSV rows and writes JSON artifacts
+to results/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = [
+    ("table1", "benchmarks.bench_table1"),
+    ("fig1", "benchmarks.bench_fig1"),
+    ("fig2_fig4", "benchmarks.bench_fig2"),
+    ("fig5", "benchmarks.bench_fig5"),
+    ("toy_fig7", "benchmarks.bench_toy"),
+    ("appC", "benchmarks.bench_appc"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("bench,name,us_per_call,derived")
+    failures = []
+    for name, modname in BENCHES:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover
+            failures.append((name, repr(e)))
+            print(f"{name},ERROR,0,{e!r}")
+            continue
+        dt = (time.perf_counter() - t0) * 1e6
+        for r in rows:
+            tag = r.get("problem") or r.get("arch") or r.get("dist") or \
+                r.get("heterogeneity") or r.get("combo") or ""
+            extra = {k: v for k, v in r.items()
+                     if k not in ("bench", "problem", "arch", "dist")}
+            derived = ";".join(f"{k}={v}" for k, v in list(extra.items())[:6])
+            print(f"{name},{tag},{dt / max(len(rows), 1):.0f},{derived}")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

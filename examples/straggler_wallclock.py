@@ -1,0 +1,45 @@
+"""Sparse topologies win in wall-clock (paper Fig. 5) — with zero
+communication delay, purely from straggler mitigation.
+
+    PYTHONPATH=src python examples/straggler_wallclock.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import straggler as S
+from repro.core import topology as T
+
+M_WORKERS = 16
+DEGREES = [2, 4, 8, 15]
+
+
+def topo(d):
+    return T.clique(M_WORKERS) if d >= M_WORKERS - 1 else (
+        T.undirected_ring(M_WORKERS) if d == 2 else T.ring_lattice(M_WORKERS, d))
+
+
+def main():
+    problem = common.problem_classifier()
+    print("training loss per iteration is topology-insensitive (random split);")
+    print("wall-clock time is NOT — Spark-like compute-time distribution,")
+    print("zero communication delay:\n")
+    curves = {d: common.run_dsm(problem, topo(d), steps=150, lr=0.5)[0]
+              for d in DEGREES}
+    target = max(np.min(c) for c in curves.values()) + 0.05
+    print(f"{'degree':>7} {'it/s':>8} {'final loss':>11} {'t(loss<%.2f)':>14}" % target)
+    for d in DEGREES:
+        sim = S.simulate(topo(d), 400, S.spark_like(), seed=7)
+        t, f = S.loss_vs_time(curves[d], sim)
+        hit = np.nonzero(f <= target)[0]
+        t_hit = t[hit[0]] if len(hit) else float("inf")
+        print(f"{d:7d} {sim.throughput:8.3f} {float(f[-1]):11.4f} {t_hit:14.1f}")
+    print("\nsparser degree -> higher throughput -> earlier target hit,")
+    print("exactly the paper's Fig. 5 conclusion.")
+
+
+if __name__ == "__main__":
+    main()

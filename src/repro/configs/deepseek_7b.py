@@ -1,0 +1,19 @@
+"""deepseek-7b [dense] — llama architecture. [arXiv:2401.02954]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    arch_type="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=102400,
+    mlp_type="swiglu",
+    source="arXiv:2401.02954",
+    dp_mode="gossip",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,24 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP. [arXiv:2402.16819]
+
+A 340B replica (params + momentum) cannot fit on one 16-chip model-parallel
+group, so per-worker replicas (the paper's technique) are infeasible at this
+mesh; trained in `fsdp` mode (DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    arch_type="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp_type="relu2",
+    source="arXiv:2402.16819",
+    dp_mode="fsdp",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

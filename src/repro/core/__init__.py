@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — consensus-based decentralized optimization,
+its refined convergence analysis, and the straggler/wall-clock model."""
+from repro.core import analysis, decentralized, gossip, straggler, topology
+from repro.core.decentralized import TrainState, init_state, make_train_step, replicate_for_workers
+from repro.core.gossip import GossipSpec, mix_pytree
+from repro.core.topology import Topology
+
+__all__ = [
+    "analysis",
+    "decentralized",
+    "gossip",
+    "straggler",
+    "topology",
+    "Topology",
+    "GossipSpec",
+    "TrainState",
+    "init_state",
+    "make_train_step",
+    "replicate_for_workers",
+    "mix_pytree",
+]

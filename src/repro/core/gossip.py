@@ -1,0 +1,200 @@
+"""Gossip / consensus mixing backends (paper eq. 3, first term).
+
+The consensus step for the estimate matrix W (columns = worker replicas) is
+``W ← W·A``.  In this framework every parameter leaf carries a leading worker
+dimension of size M, so mixing leaf ``x`` of shape (M, ...) is
+``x ← einsum('im,i...->m...', A, x)``.
+
+Backends (selected via :class:`GossipSpec`):
+
+* ``einsum``     — dense contraction with A. Correct for any A; lowers to an
+                   all-gather over the worker axis (the *naive baseline* whose
+                   collective cost we hillclimb away in EXPERIMENTS.md §Perf).
+* ``ppermute``   — Birkhoff-decomposes A into weighted permutations and runs
+                   one ``jax.lax.ppermute`` per non-identity permutation inside
+                   a *partial-manual* ``shard_map`` over the worker axes; the
+                   model axes stay automatic. Collective bytes = degree ×
+                   bytes(params)/M per device, all single-hop on a ring — the
+                   TPU-native rendering of the paper's sparse topology.
+* ``allreduce``  — clique fast path: ``pmean`` over the worker axes (this is
+                   the PS / ring-allreduce baseline the paper compares with).
+
+All backends are numerically interchangeable (tests assert allclose vs the
+dense oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.topology import Topology
+
+__all__ = ["GossipSpec", "mix_pytree", "mix_reference", "make_mixer"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSpec:
+    """Static description of how the consensus step executes.
+
+    Attributes:
+      topology: the Topology (consensus matrix A, M workers).
+      backend: 'einsum' | 'ppermute' | 'allreduce' | 'auto'.
+      worker_axes: mesh axis name(s) the worker dimension is sharded over,
+        e.g. ('data',) or ('pod', 'data') for multi-pod.
+      period: gossip every `period` optimizer steps (1 = paper's synchronous
+        DSM; >1 = local-SGD-style beyond-paper variant).
+      time_varying: None (static topology) or 'one_peer_exp' — beyond-paper:
+        the step-k consensus matrix pairs node i with i ± 2^(k mod log2 M)
+        (SGP-style). Degree-1 communication per step, exact consensus every
+        log2(M) rounds — strictly cheaper than the paper's static ring with
+        faster mixing.
+    """
+
+    topology: Topology
+    backend: str = "auto"
+    worker_axes: tuple[str, ...] = ("data",)
+    period: int = 1
+    time_varying: str | None = None
+
+    def resolved_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        t = self.topology
+        if t.circulant_offsets is not None and len(t.circulant_offsets) == t.M:
+            return "allreduce"  # clique
+        return "ppermute"
+
+    @functools.cached_property
+    def permutations(self) -> list[tuple[float, np.ndarray]]:
+        return self.topology.permutations()
+
+
+# ---------------------------------------------------------------------------
+# Reference (oracle) mixing — dense matmul with A, used in tests & simulator
+# ---------------------------------------------------------------------------
+
+
+def mix_reference(x: jax.Array, A: jax.Array | np.ndarray) -> jax.Array:
+    """Dense W·A for one leaf with leading worker dim: x[m] ← Σ_i A[i,m] x[i]."""
+    A = jnp.asarray(A, dtype=x.dtype)
+    return jnp.einsum("im,i...->m...", A, x)
+
+
+def mix_pytree_reference(params: PyTree, A) -> PyTree:
+    return jax.tree.map(lambda x: mix_reference(x, A), params)
+
+
+# ---------------------------------------------------------------------------
+# Distributed mixing
+# ---------------------------------------------------------------------------
+
+
+def _einsum_mix(params: PyTree, spec: GossipSpec) -> PyTree:
+    A = spec.topology.A
+    return jax.tree.map(lambda x: mix_reference(x, A), params)
+
+
+def _allreduce_leaf(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    # inside shard_map, per-shard leading dim is 1 (one replica per worker)
+    return jax.lax.pmean(x, axes)
+
+
+def _ppermute_leaf(x: jax.Array, spec: GossipSpec) -> jax.Array:
+    """Mix one leaf inside shard_map: x has shape (1, ...) per worker shard."""
+    M = spec.topology.M
+    axes = spec.worker_axes if len(spec.worker_axes) > 1 else spec.worker_axes[0]
+    acc = None
+    for w, perm in spec.permutations:
+        is_identity = bool(np.all(perm == np.arange(M)))
+        if is_identity:
+            contrib = x * x.dtype.type(w)
+        else:
+            # perm[j] = source for destination j  ⇒ ppermute pairs (src, dst)
+            pairs = [(int(perm[j]), j) for j in range(M)]
+            contrib = jax.lax.ppermute(x, axes, pairs) * x.dtype.type(w)
+        acc = contrib if acc is None else acc + contrib
+    return acc
+
+
+def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn) -> PyTree:
+    """Run leaf_fn per worker shard with the worker axes manual, rest auto."""
+    specs = jax.tree.map(lambda _: P(spec.worker_axes), params)
+
+    def f(p):
+        return jax.tree.map(leaf_fn, p)
+
+    return jax.shard_map(
+        f,
+        mesh=mesh,
+        in_specs=(specs,),
+        out_specs=specs,
+        axis_names=set(spec.worker_axes),
+    )(params)
+
+
+def mix_pytree(params: PyTree, spec: GossipSpec, mesh=None) -> PyTree:
+    """Consensus step over the parameter pytree (leaves have leading M dim)."""
+    backend = spec.resolved_backend()
+    if backend == "einsum":
+        return _einsum_mix(params, spec)
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:  # pragma: no cover - interactive use
+            return _einsum_mix(params, spec)
+    if backend == "allreduce":
+        return _shard_map_mix(
+            params, spec, mesh, lambda x: _allreduce_leaf(x, spec.worker_axes)
+        )
+    if backend == "ppermute":
+        return _shard_map_mix(params, spec, mesh, lambda x: _ppermute_leaf(x, spec))
+    raise ValueError(f"unknown gossip backend {backend!r}")
+
+
+def make_mixer(spec: GossipSpec, mesh=None):
+    """Returns params -> mixed_params closure for the given spec."""
+
+    def mixer(params: PyTree) -> PyTree:
+        return mix_pytree(params, spec, mesh)
+
+    return mixer
+
+
+def mix_pytree_time_varying(params: PyTree, spec: GossipSpec, step: jax.Array,
+                            mesh=None) -> PyTree:
+    """Step-dependent consensus (spec.time_varying = 'one_peer_exp').
+
+    lax.switch over the log2(M) one-peer-exponential rounds; each branch is
+    the normal (einsum/ppermute) mix for that round's pairwise topology.
+    """
+    from repro.core.topology import one_peer_exponential
+
+    M = spec.topology.M
+    tau = int(np.log2(M))
+    assert 1 << tau == M, "one_peer_exp needs M a power of two"
+    branches = []
+    for k in range(tau):
+        sub = dataclasses.replace(
+            spec, topology=one_peer_exponential(M, k), time_varying=None)
+        branches.append(lambda p, s=sub: mix_pytree(p, s, mesh))
+    return jax.lax.switch(step % tau, branches, params)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical multi-pod mixing (beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------------
+
+
+def hierarchical_mix(params: PyTree, intra: GossipSpec, inter: GossipSpec, mesh=None) -> PyTree:
+    """Two-level gossip: dense/cheap mixing inside a pod (fast ICI), sparse
+    mixing across pods (slow DCI). Equivalent consensus matrix is the
+    Kronecker product A_inter ⊗ A_intra — still doubly stochastic & normal.
+    """
+    return mix_pytree(mix_pytree(params, intra, mesh), inter, mesh)

@@ -1,0 +1,161 @@
+"""Straggler / wall-clock simulation (paper §4, Fig. 5, App. G).
+
+The paper's second claim: sparse topologies converge faster in *wall-clock*
+time even with zero communication delay, because a transient straggler only
+stalls its out-neighbors.  Model (synchronous local barrier):
+
+    t_j(k+1) = max_{i ∈ N_j ∪ {j}} t_i(k) + T_j(k+1)
+
+with T_j(k) the random computation time.  For the clique this degenerates to
+the global barrier  t(k+1) = max_j t_j(k) + max_j T_j(k+1)-ish behaviour and
+throughput collapses to the slowest node each round.
+
+Distributions include heavy-tail empirical shapes matching the paper's Spark
+and ASCI-Q traces (Fig. 10): a tight body plus a small-probability multi-x
+slowdown tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+TimeSampler = Callable[[np.random.Generator, tuple[int, ...]], np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Computation-time distributions
+# ---------------------------------------------------------------------------
+
+
+def deterministic(mean: float = 1.0) -> TimeSampler:
+    return lambda rng, shape: np.full(shape, mean)
+
+
+def uniform(low: float = 0.8, high: float = 1.2) -> TimeSampler:
+    return lambda rng, shape: rng.uniform(low, high, shape)
+
+
+def exponential(mean: float = 1.0) -> TimeSampler:
+    return lambda rng, shape: rng.exponential(mean, shape)
+
+
+def pareto(alpha: float = 2.5, xm: float = 0.6) -> TimeSampler:
+    """Pareto with shape alpha, scale xm (heavy tail for alpha ≤ ~2.5)."""
+    return lambda rng, shape: xm * (1.0 + rng.pareto(alpha, shape))
+
+
+def spark_like(base: float = 1.0, jitter: float = 0.05,
+               p_slow: float = 0.05, slow_factor: float = 4.0) -> TimeSampler:
+    """Empirical shape of the paper's Spark-cluster CDF (Fig. 10a): tight body
+    around the typical time + occasional multi-x slowdowns (GC, contention)."""
+
+    def sample(rng: np.random.Generator, shape):
+        t = base * rng.lognormal(0.0, jitter, shape)
+        slow = rng.random(shape) < p_slow
+        return np.where(slow, t * rng.uniform(2.0, slow_factor, shape), t)
+
+    return sample
+
+
+def asciq_like(base: float = 1.0) -> TimeSampler:
+    """ASCI-Q-style (Fig. 10b): OS noise — frequent small interruptions plus
+    rare long preemptions (heavier tail than spark_like)."""
+
+    def sample(rng: np.random.Generator, shape):
+        t = base * (1.0 + 0.02 * rng.standard_gamma(1.0, shape))
+        slow = rng.random(shape) < 0.01
+        return np.where(slow, t + base * rng.exponential(8.0, shape), t)
+
+    return sample
+
+
+DISTRIBUTIONS: dict[str, Callable[..., TimeSampler]] = {
+    "deterministic": deterministic,
+    "uniform": uniform,
+    "exponential": exponential,
+    "pareto": pareto,
+    "spark": spark_like,
+    "asciq": asciq_like,
+}
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    completion: np.ndarray  # (M, K+1) completion time of iteration k per node
+    comm_delay: float
+
+    @property
+    def K(self) -> int:
+        return self.completion.shape[1] - 1
+
+    @property
+    def avg_completion(self) -> np.ndarray:
+        """Mean completion time per iteration (len K+1)."""
+        return self.completion.mean(axis=0)
+
+    @property
+    def throughput(self) -> float:
+        """Iterations per unit time at the end of the run (paper Fig. 5a)."""
+        return self.K / float(self.completion[:, -1].mean())
+
+
+def simulate(
+    topology: Topology,
+    K: int,
+    sampler: TimeSampler,
+    *,
+    comm_delay: float = 0.0,
+    seed: int = 0,
+) -> SimResult:
+    """Run the local-barrier time recursion for K iterations.
+
+    comm_delay: per-hop communication delay added to each neighbor wait (the
+      paper's main experiments use 0 — "even when communication costs are
+      negligible").
+    """
+    M = topology.M
+    rng = np.random.default_rng(seed)
+    T = sampler(rng, (M, K))
+    # dependency mask: dep[i, j] = node j waits for node i (in-neighbors + self)
+    dep = (topology.A > 0).astype(bool)
+    t = np.zeros((M, K + 1))
+    for k in range(K):
+        # start_j = max over i with dep[i, j] of (t_i(k) + comm_delay·[i≠j])
+        waits = np.where(dep, t[:, k][:, None] + comm_delay * (~np.eye(M, dtype=bool)), -np.inf)
+        start = waits.max(axis=0)
+        t[:, k + 1] = start + T[:, k]
+    return SimResult(completion=t, comm_delay=comm_delay)
+
+
+def loss_vs_time(
+    loss_per_iteration: np.ndarray, sim: SimResult
+) -> tuple[np.ndarray, np.ndarray]:
+    """Combine a loss-vs-iteration curve with simulated wall-clock times
+    (paper Fig. 5c): returns (times, losses) with times = mean completion."""
+    K = min(len(loss_per_iteration), sim.K + 1)
+    return sim.avg_completion[:K], np.asarray(loss_per_iteration)[:K]
+
+
+def throughput_by_degree(
+    make_topology: Callable[[int], Topology],
+    degrees: list[int],
+    K: int,
+    sampler: TimeSampler,
+    *,
+    seed: int = 0,
+    comm_delay: float = 0.0,
+) -> dict[int, float]:
+    """Paper Fig. 5(a): iterations/time as a function of connectivity d."""
+    return {
+        d: simulate(make_topology(d), K, sampler, seed=seed, comm_delay=comm_delay).throughput
+        for d in degrees
+    }

@@ -1,0 +1,469 @@
+"""Communication topologies and consensus matrices (paper §2, App. B/F/G).
+
+A topology is a strongly-connected digraph over M workers plus a doubly
+stochastic, normal consensus matrix ``A``: ``A[i, j]`` is the weight node j
+gives node i's estimate, so the consensus step is ``W(k+1) = W(k) @ A`` for
+the n×M estimate matrix W (paper eq. 5).
+
+Everything here is plain numpy: topologies are *static metadata* consumed by
+the JAX gossip backends (`repro.core.gossip`) and by the analysis module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "clique",
+    "undirected_ring",
+    "ring_lattice",
+    "directed_ring_lattice",
+    "torus_2d",
+    "hypercube",
+    "star",
+    "random_regular",
+    "expander",
+    "one_peer_exponential",
+    "metropolis_weights",
+    "uniform_weights",
+    "permutation_decomposition",
+    "spectral_gap",
+    "second_eigenvalue_modulus",
+    "spectral_projectors",
+    "energy_fractions",
+    "BY_NAME",
+]
+
+
+# ---------------------------------------------------------------------------
+# Topology container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A communication graph + consensus matrix.
+
+    Attributes:
+      name: human-readable identifier.
+      A: (M, M) consensus matrix, column-stochastic *and* row-stochastic
+         (doubly stochastic), normal. ``A[i, j]`` weights i's estimate in j's
+         update.
+      directed: whether the underlying graph is directed.
+      circulant_offsets: if the graph is circulant (node i listens to
+         i+δ mod M for δ in offsets, δ=0 is the self loop), the sorted offset
+         tuple; else None.  Circulant ⇒ A is normal automatically.
+    """
+
+    name: str
+    A: np.ndarray
+    directed: bool = False
+    circulant_offsets: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        A = np.asarray(self.A, dtype=np.float64)
+        object.__setattr__(self, "A", A)
+        _check_consensus_matrix(A)
+
+    @property
+    def M(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def in_degree(self) -> int:
+        """Max in-degree excluding the self loop."""
+        return int(max((np.count_nonzero(self.A[:, j]) - 1) for j in range(self.M)))
+
+    @functools.cached_property
+    def eigenvalues(self) -> np.ndarray:
+        """Eigenvalues sorted by decreasing modulus (λ1 = 1 first)."""
+        lam = np.linalg.eigvals(self.A)
+        return lam[np.argsort(-np.abs(lam), kind="stable")]
+
+    @property
+    def lambda2(self) -> float:
+        """|λ2| — modulus of the second largest eigenvalue."""
+        return float(np.abs(self.eigenvalues[1])) if self.M > 1 else 0.0
+
+    @property
+    def spectral_gap(self) -> float:
+        return 1.0 - self.lambda2
+
+    def neighbors_in(self, j: int) -> np.ndarray:
+        """In-neighborhood N_j (predecessors, excluding j itself)."""
+        (idx,) = np.nonzero(self.A[:, j])
+        return idx[idx != j]
+
+    def neighbors_out(self, i: int) -> np.ndarray:
+        (idx,) = np.nonzero(self.A[i, :])
+        return idx[idx != i]
+
+    def permutations(self) -> list[tuple[float, np.ndarray]]:
+        """Decompose A into weighted permutations (for ppermute lowering)."""
+        return permutation_decomposition(self.A)
+
+
+def _check_consensus_matrix(A: np.ndarray, tol: float = 1e-9) -> None:
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"consensus matrix must be square, got {A.shape}")
+    if np.any(A < -tol):
+        raise ValueError("consensus matrix must be non-negative")
+    if not np.allclose(A.sum(0), 1.0, atol=1e-7) or not np.allclose(A.sum(1), 1.0, atol=1e-7):
+        raise ValueError("consensus matrix must be doubly stochastic")
+    if not np.allclose(A.T @ A, A @ A.T, atol=1e-7):
+        raise ValueError("consensus matrix must be normal (A^T A = A A^T)")
+
+
+# ---------------------------------------------------------------------------
+# Weight rules
+# ---------------------------------------------------------------------------
+
+
+def uniform_weights(adj: np.ndarray) -> np.ndarray:
+    """A_ij = 1/(d+1) for regular graphs with self-loops (paper App. F)."""
+    M = adj.shape[0]
+    adj = adj.astype(bool) | np.eye(M, dtype=bool)
+    deg = adj.sum(0)
+    if not np.all(deg == deg[0]):
+        raise ValueError("uniform weights need a regular graph; use metropolis_weights")
+    return adj.astype(np.float64) / deg[0]
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights: doubly stochastic for any undirected graph."""
+    M = adj.shape[0]
+    adj = adj.astype(bool)
+    np.fill_diagonal(adj, False)
+    if not np.array_equal(adj, adj.T):
+        raise ValueError("metropolis weights require an undirected graph")
+    deg = adj.sum(0)
+    A = np.zeros((M, M))
+    ii, jj = np.nonzero(adj)
+    A[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    np.fill_diagonal(A, 1.0 - A.sum(0))
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+
+def _circulant(M: int, offsets: Sequence[int], name: str, directed: bool) -> Topology:
+    offsets = tuple(sorted({o % M for o in offsets} | {0}))
+    A = np.zeros((M, M))
+    w = 1.0 / len(offsets)
+    for d in offsets:
+        # node j listens to node (j + d) mod M  ⇒  A[(j+d)%M, j] = w
+        idx = (np.arange(M) + d) % M
+        A[idx, np.arange(M)] += w
+    return Topology(name=name, A=A, directed=directed, circulant_offsets=offsets)
+
+
+def clique(M: int) -> Topology:
+    """Fully connected: A = 11^T / M — the PS / ring-allreduce equivalent."""
+    return _circulant(M, tuple(range(M)), f"clique-{M}", directed=False)
+
+
+def undirected_ring(M: int) -> Topology:
+    """Cycle graph, degree 2 (the paper's sparsest undirected topology)."""
+    return _circulant(M, (1, M - 1), f"ring-{M}", directed=False)
+
+
+def ring_lattice(M: int, d: int) -> Topology:
+    """Undirected d-regular ring lattice (paper App. F): i ↔ i±1..i±d/2."""
+    if d % 2 or d >= M:
+        raise ValueError("ring_lattice needs even d < M")
+    offs = [k for k in range(1, d // 2 + 1)] + [M - k for k in range(1, d // 2 + 1)]
+    return _circulant(M, offs, f"ring_lattice-{M}-d{d}", directed=False)
+
+
+def directed_ring_lattice(M: int, d: int) -> Topology:
+    """Directed regular ring lattice (paper App. G): i listens to i+1..i+d."""
+    if not 1 <= d < M:
+        raise ValueError("need 1 <= d < M")
+    return _circulant(M, range(1, d + 1), f"dir_ring_lattice-{M}-d{d}", directed=True)
+
+
+def torus_2d(rows: int, cols: int) -> Topology:
+    """2-D torus, degree 4 — matches TPU ICI physical topology."""
+    M = rows * cols
+    adj = np.zeros((M, M), dtype=bool)
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for rr, cc in (((r + 1) % rows, c), ((r - 1) % rows, c), (r, (c + 1) % cols), (r, (c - 1) % cols)):
+                adj[i, rr * cols + cc] = True
+    np.fill_diagonal(adj, False)
+    deg = adj.sum(0)
+    A = uniform_weights(adj) if np.all(deg == deg[0]) else metropolis_weights(adj)
+    return Topology(name=f"torus-{rows}x{cols}", A=A, directed=False)
+
+
+def hypercube(log2M: int) -> Topology:
+    """Hypercube on 2^log2M nodes (degree log2M); neighbors via bit flips."""
+    M = 1 << log2M
+    adj = np.zeros((M, M), dtype=bool)
+    for i in range(M):
+        for b in range(log2M):
+            adj[i, i ^ (1 << b)] = True
+    return Topology(name=f"hypercube-{M}", A=uniform_weights(adj), directed=False)
+
+
+def star(M: int) -> Topology:
+    """Star (hub-and-spoke) — the PS physical topology; Metropolis weights."""
+    adj = np.zeros((M, M), dtype=bool)
+    adj[0, 1:] = adj[1:, 0] = True
+    return Topology(name=f"star-{M}", A=metropolis_weights(adj), directed=False)
+
+
+def random_regular(M: int, d: int, seed: int = 0, max_tries: int = 2000) -> Topology:
+    """Random d-regular undirected simple graph via the pairing model."""
+    if (M * d) % 2 or d >= M:
+        raise ValueError("need M*d even and d < M")
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        stubs = np.repeat(np.arange(M), d)
+        rng.shuffle(stubs)
+        pairs = stubs.reshape(-1, 2)
+        if np.any(pairs[:, 0] == pairs[:, 1]):
+            continue
+        adj = np.zeros((M, M), dtype=bool)
+        key = pairs.min(1) * M + pairs.max(1)
+        if len(np.unique(key)) != len(key):  # multi-edge
+            continue
+        adj[pairs[:, 0], pairs[:, 1]] = True
+        adj |= adj.T
+        if _is_connected(adj):
+            return Topology(name=f"rr-{M}-d{d}-s{seed}", A=uniform_weights(adj), directed=False)
+    raise RuntimeError("failed to sample a connected random regular graph")
+
+
+def expander(M: int, d: int, seed: int = 0, n_candidates: int = 50) -> Topology:
+    """Best-of-N random regular graph by spectral gap (paper App. G)."""
+    if d == 2:
+        return undirected_ring(M)
+    if d >= M - 1:
+        return clique(M)
+    best = None
+    for s in range(n_candidates):
+        t = random_regular(M, d, seed=seed * 10_000 + s)
+        if best is None or t.spectral_gap > best.spectral_gap:
+            best = t
+    return dataclasses.replace(best, name=f"expander-{M}-d{d}")
+
+
+def kronecker(outer: Topology, inner: Topology, name: str | None = None) -> Topology:
+    """Hierarchical topology A_outer ⊗ A_inner (beyond-paper, multi-pod):
+    worker (p, i) mixes within its pod via A_inner and across pods via
+    A_outer. Kronecker products of doubly-stochastic normal matrices are
+    doubly stochastic and normal; λ2(A⊗B) = max over non-unit eigenvalue
+    products. Matches the physical pod/ICI hierarchy: intra-pod edges are
+    cheap, the inter-pod edge count is |E_outer| per parameter shard."""
+    A = np.kron(outer.A, inner.A)
+    return Topology(
+        name=name or f"kron({outer.name},{inner.name})", A=A,
+        directed=outer.directed or inner.directed)
+
+
+def one_peer_exponential(M: int, k: int) -> Topology:
+    """Time-varying one-peer exponential graph (beyond-paper, Assran et al.):
+    at step k each node exchanges with the single peer at offset 2^(k mod log2 M).
+    Returns the step-k topology (degree 1, A symmetric pairwise averaging when
+    the offset is M/2, else a directed permutation mix)."""
+    if M & (M - 1):
+        raise ValueError("one_peer_exponential needs M a power of two")
+    tau = int(np.log2(M))
+    off = 1 << (k % tau)
+    A = 0.5 * (np.eye(M) + np.roll(np.eye(M), off, axis=1))
+    # roll of identity is a permutation => A normal & doubly stochastic.
+    return Topology(name=f"onepeer-{M}-k{k % tau}", A=A, directed=True,
+                    circulant_offsets=(0, off))
+
+
+def _is_connected(adj: np.ndarray) -> bool:
+    M = adj.shape[0]
+    seen = np.zeros(M, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+# ---------------------------------------------------------------------------
+# Spectral analysis (paper §3, App. B)
+# ---------------------------------------------------------------------------
+
+
+def second_eigenvalue_modulus(A: np.ndarray) -> float:
+    lam = np.linalg.eigvals(np.asarray(A, np.float64))
+    return float(np.sort(np.abs(lam))[-2]) if A.shape[0] > 1 else 0.0
+
+
+def spectral_gap(A: np.ndarray) -> float:
+    return 1.0 - second_eigenvalue_modulus(A)
+
+
+def spectral_projectors(A: np.ndarray, tol: float = 1e-8):
+    """Spectral decomposition A = Σ_q λ_q P_q with orthogonal projectors.
+
+    Works for any normal matrix. Returns (lambdas, projectors) with Q distinct
+    eigenvalues sorted by decreasing modulus; projectors are real when A is
+    real-normal with conjugate eigenvalue pairs merged? No — we keep complex
+    projectors but pair-merged energy computations stay real. For symmetric A
+    (the common case) everything is real.
+    """
+    A = np.asarray(A, np.float64)
+    if np.allclose(A, A.T, atol=1e-10):
+        lam, V = np.linalg.eigh(A)
+    else:
+        lam, V = np.linalg.eig(A)
+        # For a normal matrix eig returns a basis that may not be orthonormal
+        # inside degenerate eigenspaces; orthonormalize group-wise below.
+    order = np.argsort(-np.abs(lam), kind="stable")
+    lam, V = lam[order], V[:, order]
+    # group eigenvalues
+    groups: list[list[int]] = []
+    for i, l in enumerate(lam):
+        for g in groups:
+            if abs(lam[g[0]] - l) < tol:
+                g.append(i)
+                break
+        else:
+            groups.append([i])
+    lambdas, projectors = [], []
+    for g in groups:
+        Vg = V[:, g]
+        # orthonormalize (QR) inside the eigenspace
+        Q, _ = np.linalg.qr(Vg)
+        P = Q @ Q.conj().T
+        lambdas.append(lam[g[0]])
+        projectors.append(P)
+    return np.asarray(lambdas), projectors
+
+
+def energy_fractions(G_rows: np.ndarray, A: np.ndarray) -> np.ndarray:
+    """Normalized energy fractions e_q of ΔG in each eigenspace (paper eq. 32).
+
+    Args:
+      G_rows: (n, M) matrix whose rows are projected onto A's eigenspaces
+        (use ΔG = G - G 11^T/M).
+      A: consensus matrix.
+    Returns: e, shape (Q,), with e[0] the λ1=1 subspace (≈0 for ΔG) and
+      Σ_{q≥1} e[q] = 1.
+    """
+    lam, projs = spectral_projectors(A)
+    G = np.asarray(G_rows, np.float64)
+    energies = np.array([float(np.linalg.norm(G @ P, "fro") ** 2) for P in projs])
+    total = energies[1:].sum()
+    if total <= 0:
+        e = np.zeros_like(energies)
+        if len(e) > 1:
+            e[1] = 1.0
+        return e
+    e = energies / total
+    e[0] = 0.0
+    return e
+
+
+def alpha_from_fractions(e: np.ndarray, lambdas: np.ndarray) -> float:
+    """α (paper eq. 6): effective energy fraction in the λ2 subspace."""
+    lam2 = abs(lambdas[1]) if len(lambdas) > 1 else 0.0
+    if lam2 == 0:
+        return 1.0
+    ratios = np.abs(lambdas[1:]) / lam2
+    return float(np.sqrt(np.sum(e[1:] * ratios**2)))
+
+
+# ---------------------------------------------------------------------------
+# Permutation decomposition (Birkhoff-style peeling on the graph support)
+# ---------------------------------------------------------------------------
+
+
+def permutation_decomposition(A: np.ndarray, tol: float = 1e-12) -> list[tuple[float, np.ndarray]]:
+    """Decompose a doubly-stochastic A into Σ w_p · Perm_p.
+
+    Returns a list of (weight, perm) where perm[j] = source node whose
+    estimate node j receives in that round (perm is a permutation of 0..M-1).
+    The identity permutation (self weights) is included. This is what the
+    ppermute gossip backend executes: one `jax.lax.ppermute` per non-identity
+    permutation.
+    """
+    A = np.asarray(A, np.float64).copy()
+    M = A.shape[0]
+    out: list[tuple[float, np.ndarray]] = []
+    # Fast path: circulant support → offsets are permutations already.
+    while A.max() > tol:
+        support = A > tol
+        perm = _perfect_matching(support)
+        if perm is None:
+            raise RuntimeError("Birkhoff peeling failed (no perfect matching)")
+        w = float(A[perm, np.arange(M)].min())
+        A[perm, np.arange(M)] -= w
+        out.append((w, perm))
+    out.sort(key=lambda t: -t[0])
+    return out
+
+
+def _perfect_matching(support: np.ndarray) -> np.ndarray | None:
+    """Perfect matching on bipartite graph rows→cols via augmenting paths.
+
+    support[i, j] True means source i may serve destination j. Returns
+    perm with perm[j] = i, or None.
+    """
+    M = support.shape[0]
+    match_col = -np.ones(M, dtype=int)  # col j -> row i
+    match_row = -np.ones(M, dtype=int)
+
+    def augment(i: int, visited: np.ndarray) -> bool:
+        for j in np.nonzero(support[i])[0]:
+            if visited[j]:
+                continue
+            visited[j] = True
+            if match_col[j] < 0 or augment(match_col[j], visited):
+                match_col[j] = i
+                match_row[i] = j
+                return True
+        return False
+
+    for i in range(M):
+        if not augment(i, np.zeros(M, dtype=bool)):
+            return None
+    return match_col
+
+
+BY_NAME: dict[str, Callable[..., Topology]] = {
+    "clique": clique,
+    "ring": undirected_ring,
+    "ring_lattice": ring_lattice,
+    "directed_ring_lattice": directed_ring_lattice,
+    "torus": torus_2d,
+    "hypercube": hypercube,
+    "star": star,
+    "random_regular": random_regular,
+    "expander": expander,
+}
+
+
+def make(name: str, M: int, **kw) -> Topology:
+    """Build a topology by name with M nodes (degree etc. via kwargs)."""
+    if name == "torus":
+        side = int(np.sqrt(M))
+        if side * side != M:
+            raise ValueError("torus needs square M")
+        return torus_2d(side, side)
+    if name == "hypercube":
+        l = int(np.log2(M))
+        if 1 << l != M:
+            raise ValueError("hypercube needs M power of two")
+        return hypercube(l)
+    return BY_NAME[name](M, **kw)

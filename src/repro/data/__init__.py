@@ -1,0 +1,14 @@
+from repro.data import partition, synthetic
+from repro.data.partition import random_split, replicated_split, split_by_label, pad_to_equal
+from repro.data.synthetic import (
+    WorkerBatcher,
+    classification_data,
+    linear_regression_data,
+    token_stream,
+)
+
+__all__ = [
+    "partition", "synthetic", "random_split", "replicated_split",
+    "split_by_label", "pad_to_equal", "WorkerBatcher",
+    "classification_data", "linear_regression_data", "token_stream",
+]

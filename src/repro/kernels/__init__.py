@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the two perf-critical hot spots:
+  * gossip_mix       — fused consensus-mix + SGD update (memory-bound)
+  * flash_attention  — blockwise attention for 32k prefill shapes
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit
+wrapper), ref.py (pure-jnp oracle); validated in interpret=True on CPU.
+"""

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused gossip-mix + SGD update.
+
+One VMEM pass computes  out = a₀·w + Σ_d a_{d+1}·nbr_d − η·u  over 2-D tiles.
+
+Memory traffic per element: (k + 2) reads + 1 write in a single pass, versus
+2(k + 2) reads + (k + 2) writes for the unfused chain of axpys — the gossip
+step is purely memory-bound (arithmetic intensity ≈ (k+2) FLOPs per (k+2)·4
+bytes), so the fusion is worth ~2× HBM traffic on the full parameter set
+*every iteration*.
+
+Tiling: inputs are reshaped to (R, C) with C a multiple of 128 (lane width)
+and R tiled by BLOCK_R sublanes; neighbor buffers are stacked on a leading
+dim and each tile of every buffer is resident in VMEM simultaneously —
+VMEM footprint = (k + 2) · BLOCK_R · BLOCK_C · 4 B, sized ≤ ~4 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 256
+DEFAULT_BLOCK_C = 512
+
+
+def _kernel(w_ref, nbr_ref, wts_ref, upd_ref, eta_ref, out_ref, *, k: int):
+    acc = w_ref[...].astype(jnp.float32) * wts_ref[0]
+    for d in range(k):  # k is static — unrolled adds, single pass
+        acc += nbr_ref[d].astype(jnp.float32) * wts_ref[d + 1]
+    acc -= eta_ref[0] * upd_ref[...].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def gossip_mix_2d(
+    w: jax.Array,          # (R, C)
+    neighbors: jax.Array,  # (k, R, C)
+    weights: jax.Array,    # (k + 1,) float32
+    update: jax.Array,     # (R, C)
+    eta: jax.Array,        # (1,) float32
+    *,
+    block_r: int = DEFAULT_BLOCK_R,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = False,
+) -> jax.Array:
+    k, R, C = neighbors.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    assert R % block_r == 0 and C % block_c == 0, (R, C, block_r, block_c)
+    grid = (R // block_r, C // block_c)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((k, block_r, block_c), lambda i, j: (0, i, j)),
+            pl.BlockSpec((k + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), w.dtype),
+        interpret=interpret,
+    )(w, neighbors, weights, update, eta)

@@ -1,0 +1,60 @@
+"""jit'd wrapper: fused gossip-mix + update over arbitrary parameter pytrees.
+
+Flattens every leaf, pads to the 2-D tile grid, runs the Pallas kernel, and
+restores shapes.  `interpret=True` (default on CPU) executes the kernel body
+in Python for validation; on TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gossip_mix.kernel import DEFAULT_BLOCK_C, DEFAULT_BLOCK_R, gossip_mix_2d
+
+PyTree = Any
+
+
+def _pad_to_2d(x: jax.Array, block_r: int, block_c: int):
+    n = x.size
+    c = block_c
+    r = int(np.ceil(n / c / block_r)) * block_r
+    pad = r * c - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(r, c), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r", "block_c"))
+def gossip_mix_leaf(
+    w: jax.Array, neighbors: jax.Array, weights: jax.Array, update: jax.Array,
+    eta, *, interpret: bool = True,
+    block_r: int = DEFAULT_BLOCK_R, block_c: int = DEFAULT_BLOCK_C,
+) -> jax.Array:
+    """Fused mix+update for one leaf of any shape. neighbors: (k, *w.shape)."""
+    k = neighbors.shape[0]
+    w2, n = _pad_to_2d(w, block_r, block_c)
+    nb2 = jnp.stack([_pad_to_2d(neighbors[d], block_r, block_c)[0] for d in range(k)])
+    up2, _ = _pad_to_2d(update, block_r, block_c)
+    out = gossip_mix_2d(
+        w2, nb2, weights.astype(jnp.float32),
+        up2, jnp.asarray([eta], jnp.float32),
+        block_r=min(block_r, w2.shape[0]), block_c=block_c, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(w.shape)
+
+
+def gossip_mix_pytree(params: PyTree, neighbor_params: list[PyTree],
+                      weights: jax.Array, updates: PyTree, eta,
+                      *, interpret: bool = True) -> PyTree:
+    """Apply the fused kernel leaf-wise over a parameter pytree."""
+    flat_w, tdef = jax.tree.flatten(params)
+    flat_nbrs = [tdef.flatten_up_to(nb) for nb in neighbor_params]
+    flat_up = tdef.flatten_up_to(updates)
+    outs = []
+    for i, w in enumerate(flat_w):
+        nb = jnp.stack([fn[i] for fn in flat_nbrs])
+        outs.append(gossip_mix_leaf(w, nb, weights, flat_up[i], eta,
+                                    interpret=interpret))
+    return tdef.unflatten(outs)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused gossip-mix + SGD-update kernel.
+
+The consensus step at worker j (paper eq. 3, with classical momentum):
+
+    w_j ← a_self·w_j + Σ_d a_d·nbr_d − η·u_j
+
+Unfused, this is (k+2) full passes over the parameter HBM footprint (one per
+neighbor buffer, one for self, one for the momentum update).  The Pallas
+kernel fuses them into a single VMEM-tiled pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_mix_reference(
+    w_self: jax.Array,       # (N,) or any shape
+    neighbors: jax.Array,    # (k, *w_self.shape)
+    weights: jax.Array,      # (k + 1,): [a_self, a_1, ..., a_k]
+    update: jax.Array,       # (*w_self.shape) — momentum/grad step, pre-scaled
+    eta: float | jax.Array,  # learning rate
+) -> jax.Array:
+    acc = w_self.astype(jnp.float32) * weights[0]
+    for d in range(neighbors.shape[0]):
+        acc = acc + neighbors[d].astype(jnp.float32) * weights[d + 1]
+    return (acc - eta * update.astype(jnp.float32)).astype(w_self.dtype)

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run forces 512 host devices *before* any
+jax import (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                  # 256 chips
+MULTI_POD = (2, 16, 16)                # 2 pods × 256 chips = 512
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if pod:
+        assert pod * data * model <= n
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def worker_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes hosting the decentralized workers (all but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_workers(mesh) -> int:
+    out = 1
+    for a in worker_axes(mesh):
+        out *= mesh.shape[a]
+    return out

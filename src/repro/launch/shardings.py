@@ -1,0 +1,176 @@
+"""Sharding rules: params, batches, and KV caches → PartitionSpecs.
+
+Three data-parallel modes:
+  gossip    — every param leaf gets a leading worker dim sharded over the
+              worker axes; within a worker the model axis shards heads/ff/vocab.
+  allreduce — params replicated over worker axes (centralized baseline).
+  fsdp      — no worker dim; the `embed` (d_model) logical axis is additionally
+              sharded over the worker axes (nemotron-scale fallback).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import n_workers, worker_axes
+from repro.models import model as M
+from repro.models.params import DEFAULT_RULES, tree_specs
+
+PyTree = Any
+
+
+def _wa(mesh) -> Any:
+    wa = worker_axes(mesh)
+    return wa[0] if len(wa) == 1 else wa
+
+
+def param_pspecs(cfg: ModelConfig, mesh, mode: str | None = None,
+                 worker_internal: str = "tp") -> PyTree:
+    """worker_internal (gossip mode only):
+      'tp' — each worker tensor-parallelizes its replica over 'model' (default);
+      'dp' — each worker REPLICATES its params over 'model' and splits its
+             local batch instead (§Perf hillclimb: removes per-layer TP
+             activation all-reduces; one gradient psum per step remains).
+    """
+    mode = mode or cfg.dp_mode
+    defs = M.model_defs(cfg)
+    if mode == "gossip":
+        if worker_internal == "dp":
+            rules = {k: None for k in DEFAULT_RULES}
+            return tree_specs(defs, rules=rules, mesh=mesh,
+                              prefix_axes=(_wa(mesh),))
+        # 'tp' and 'fsdp' share param storage sharding (heads/ff/vocab over
+        # 'model'); they differ in the batch spec — with the batch split over
+        # 'model' too, XLA gathers the (smaller) weights per layer instead of
+        # all-reducing activations: FSDP-within-worker (§Perf hillclimb A).
+        return tree_specs(defs, mesh=mesh, prefix_axes=(_wa(mesh),))
+    if mode == "allreduce":
+        rules = None
+        if cfg.moe_shard == "capacity":
+            rules = dict(DEFAULT_RULES)
+            rules["experts"] = None
+            rules["expert_ff"] = None   # replicate expert weights
+        return tree_specs(defs, rules=rules, mesh=mesh)
+    if mode == "fsdp":
+        rules = dict(DEFAULT_RULES)
+        rules["embed"] = _wa(mesh)          # shard d_model over worker axes
+        return tree_specs(defs, rules=rules, mesh=mesh)
+    raise ValueError(mode)
+
+
+def state_pspecs(cfg: ModelConfig, mesh, opt_state_like: PyTree,
+                 params_spec: PyTree) -> PyTree:
+    """TrainState(step, params, opt_state) specs; momentum mirrors params."""
+    from repro.core.decentralized import TrainState
+
+    # momentum_sgd state mirrors params; adam state is {"m":..., "v":...}
+    if isinstance(opt_state_like, dict) and set(opt_state_like) == {"m", "v"}:
+        opt_spec_tree = {"m": params_spec, "v": params_spec}
+    elif opt_state_like == ():
+        opt_spec_tree = ()
+    else:
+        opt_spec_tree = params_spec
+    return TrainState(P(), params_spec, opt_spec_tree)
+
+
+def batch_pspecs(cfg: ModelConfig, mesh, kind: str, mode: str,
+                 worker_internal: str = "tp") -> PyTree:
+    wa = _wa(mesh)
+    specs = {}
+    if mode == "gossip" and kind == "train":
+        # worker_internal 'dp'/'fsdp': split the per-worker batch over 'model'
+        b_ax = "model" if worker_internal in ("dp", "fsdp") else None
+        specs["tokens"] = P(wa, b_ax, None)      # (M, b, L)
+        specs["labels"] = P(wa, b_ax, None)
+        if cfg.encoder_layers:
+            specs["enc_embeds"] = P(wa, b_ax, None, None)
+    else:
+        specs["tokens"] = P(wa, None)            # (B, L)
+        if kind == "train":
+            specs["labels"] = P(wa, None)
+        if cfg.encoder_layers:
+            specs["enc_embeds"] = P(wa, None, None)
+    return specs
+
+
+def _div(n: int, mesh, axis) -> Any:
+    """axis if n divides the mesh axis size (tuple axes = product)."""
+    names = axis if isinstance(axis, tuple) else (axis,)
+    total = int(np.prod([mesh.shape[a] for a in names]))
+    return axis if (total > 1 and n % total == 0) else None
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch: int) -> PyTree:
+    """Specs mirroring model.init_cache structure (incl. scan-stacked dims)."""
+    from repro.models.attention import KVCache, MLACache
+    from repro.models.rglru import RGLRUCache
+    from repro.models.ssm import MambaCache
+
+    wa = _wa(mesh)
+    b_ax = _div(batch, mesh, wa)
+
+    def kv_spec():
+        # prefer sharding kv heads over 'model'; if indivisible (GQA kv=8 on a
+        # 16-way model axis) shard the SEQUENCE dim instead — attention then
+        # reduces over the sharded kv length (sequence-sharded KV cache)
+        h_ax = _div(cfg.n_kv_heads, mesh, "model")
+        s_ax = "model" if h_ax is None else None
+        return KVCache(P(b_ax, s_ax, h_ax, None), P(b_ax, s_ax, h_ax, None), P())
+
+    def mla_spec():
+        # compressed cache has no head dim: shard the sequence dim
+        return MLACache(P(b_ax, "model", None), P(b_ax, "model", None), P())
+
+    def mamba_spec():
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        return MambaCache(
+            P(b_ax, None, _div(conv_dim, mesh, "model")),
+            P(b_ax, _div(cfg.ssm_nheads, mesh, "model"), None, None), P())
+
+    def rglru_spec():
+        W = cfg.lru_width or cfg.d_model
+        w_ax = _div(W, mesh, "model")
+        return RGLRUCache(P(b_ax, None, w_ax), P(b_ax, w_ax), P())
+
+    def one(kind: str):
+        if kind in ("attn", "local"):
+            return mla_spec() if cfg.attention_type == "mla" else kv_spec()
+        if kind == "ssm":
+            return mamba_spec()
+        if kind == "rglru":
+            return rglru_spec()
+        raise ValueError(kind)
+
+    segs = M.plan_segments(cfg)
+    out = []
+    for seg in segs:
+        spec = one(seg.kind)
+        if seg.scanned:
+            spec = jax.tree.map(lambda p: P(None, *p), spec,
+                                is_leaf=lambda x: isinstance(x, P))
+        else:
+            spec = [one(seg.kind) for _ in range(seg.length)]
+        out.append(spec)
+    return out
+
+
+def cross_kv_pspecs(cfg: ModelConfig, mesh, batch: int) -> PyTree:
+    wa = _wa(mesh)
+    b_ax = _div(batch, mesh, wa)
+    h_ax = _div(cfg.n_kv_heads, mesh, "model")
+    segs = M.plan_segments(cfg)
+    out = []
+    for seg in segs:
+        pair = (P(b_ax, None, h_ax, None), P(b_ax, None, h_ax, None))
+        if seg.scanned:
+            pair = jax.tree.map(lambda p: P(None, *p), pair,
+                                is_leaf=lambda x: isinstance(x, P))
+            out.append(pair)
+        else:
+            out.append([pair for _ in range(seg.length)])
+    return out

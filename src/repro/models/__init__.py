@@ -1,0 +1,16 @@
+from repro.models import attention, layers, model, params, rglru, ssm
+from repro.models.model import (
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    loss_fn,
+    model_defs,
+    prefill,
+)
+
+__all__ = [
+    "attention", "layers", "model", "params", "rglru", "ssm",
+    "decode_step", "forward", "init", "init_cache", "loss_fn",
+    "model_defs", "prefill",
+]

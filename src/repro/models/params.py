@@ -1,0 +1,127 @@
+"""Parameter definition + logical-axis sharding machinery.
+
+Every module declares its parameters as a pytree of :class:`ParamDef` with
+*logical* axis names (``embed``, ``q_heads``, ``ff`` …).  Logical axes are
+resolved to mesh axes through a rules table (MaxText-style), with automatic
+fallback to replication when a dimension does not divide the mesh axis size —
+e.g. MQA's single KV head is replicated instead of sharded 16-way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]              # logical axis name per dim
+    init: str = "normal"                       # normal | zeros | ones | small_normal
+    scale: float | None = None                 # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+# default logical→mesh rules for the production mesh ("data", "model")
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "expert_ff": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "lru": "model",
+    "kv_lora": None,
+    "embed": None,
+    "embed_table": None,
+    "layers": None,
+    None: None,
+}
+
+
+def resolve_spec(
+    d: ParamDef,
+    rules: dict[str, Any],
+    mesh_axis_sizes: dict[str, int],
+    prefix_axes: tuple[Any, ...] = (),
+) -> P:
+    """Logical axes → PartitionSpec with divisibility fallback."""
+    used: set[str] = set()
+    for a in prefix_axes:
+        for name in (a if isinstance(a, tuple) else (a,)):
+            if name:
+                used.add(name)
+    parts = []
+    for size, axis in zip(d.shape, d.axes):
+        mesh_axis = rules.get(axis, None)
+        if mesh_axis is None:
+            parts.append(None)
+            continue
+        names = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        total = int(np.prod([mesh_axis_sizes.get(n, 1) for n in names]))
+        if any(n in used for n in names) or size % max(total, 1) != 0 or total <= 1:
+            parts.append(None)
+        else:
+            parts.append(mesh_axis)
+            used.update(names)
+    return P(*prefix_axes, *parts)
+
+
+def tree_specs(
+    defs: PyTree,
+    rules: dict[str, Any] | None = None,
+    mesh=None,
+    prefix_axes: tuple[Any, ...] = (),
+) -> PyTree:
+    """PartitionSpec pytree mirroring a ParamDef pytree."""
+    merged = dict(DEFAULT_RULES)
+    merged.update(rules or {})
+    rules = merged
+    sizes = dict(zip(mesh.axis_names, mesh.shape.values() if hasattr(mesh.shape, "values") else mesh.shape)) if mesh is not None else {}
+    if mesh is not None:
+        sizes = {name: mesh.shape[name] for name in mesh.axis_names}
+    return jax.tree.map(
+        lambda d: resolve_spec(d, rules, sizes, prefix_axes), defs, is_leaf=_is_def
+    )
+
+
+def init_tree(key: jax.Array, defs: PyTree, dtype=jnp.float32) -> PyTree:
+    """Initialize a param pytree from defs. Deterministic per-leaf keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(d: ParamDef, k) -> jax.Array:
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+
+    return treedef.unflatten([make(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_tree(defs: PyTree, dtype=jnp.float32) -> PyTree:
+    """ShapeDtypeStruct pytree (for AOT lowering without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def
+    )
+
+
+def count_params(defs: PyTree) -> int:
+    return int(sum(np.prod(d.shape) for d in jax.tree.leaves(defs, is_leaf=_is_def)))

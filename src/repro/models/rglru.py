@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+The Real-Gated Linear Recurrent Unit:
+    r_t = σ(x_t W_a + b_a)            (recurrence gate)
+    i_t = σ(x_t W_x + b_x)            (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t) (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth on TPU); decode is the O(1) update.
+The full block is Griffin's recurrent block: linear in → causal conv(4) →
+RG-LRU on one branch, linear+GeLU gate on the other, multiplied, linear out.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+PyTree = Any
+C_RGLRU = 8.0
+
+
+def rglru_defs(cfg: ModelConfig) -> PyTree:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    return {
+        "w_in_rec": ParamDef((D, W), ("embed", "lru")),
+        "w_in_gate": ParamDef((D, W), ("embed", "lru")),
+        "conv_w": ParamDef((4, W), (None, "lru"), scale=0.5),
+        "conv_b": ParamDef((W,), ("lru",), init="zeros"),
+        "wa": ParamDef((W, W), ("lru", None), scale=0.02),
+        "ba": ParamDef((W,), ("lru",), init="zeros"),
+        "wx": ParamDef((W, W), ("lru", None), scale=0.02),
+        "bx": ParamDef((W,), ("lru",), init="zeros"),
+        "lambda_p": ParamDef((W,), ("lru",), init="ones"),
+        "w_out": ParamDef((W, D), ("lru", "embed")),
+    }
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array   # (B, 3, W)
+    h: jax.Array      # (B, W) float32
+    pos: jax.Array
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    W = cfg.lru_width or cfg.d_model
+    return RGLRUCache(
+        jnp.zeros((batch, 3, W), dtype),
+        jnp.zeros((batch, W), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x @ params["wa"] + params["ba"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x @ params["wx"] + params["bx"]).astype(jnp.float32)
+    log_a = -C_RGLRU * jax.nn.softplus(params["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(params, cfg: ModelConfig, x, *, cache: RGLRUCache | None = None):
+    """x: (B, L, D) -> (B, L, D)."""
+    B, L, D = x.shape
+    W = cfg.lru_width or D
+    gate = jax.nn.gelu(x @ params["w_in_gate"], approximate=True)
+    xr = x @ params["w_in_rec"]
+
+    if cache is None or L > 1:
+        pad = jnp.zeros((B, 3, W), xr.dtype)
+        xp = jnp.concatenate([pad, xr], axis=1)
+        conv = sum(xp[:, i:i + L] * params["conv_w"][i][None, None] for i in range(4))
+        conv = conv + params["conv_b"]
+        a, bterm = _gates(params, conv)            # (B, L, W) each
+        # associative linear recurrence h_t = a_t h_{t-1} + b_t
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+        new_cache = None
+        if cache is not None:  # prefill
+            new_cache = RGLRUCache(xp[:, L:], h[:, -1], cache.pos + L)
+    else:
+        hist = jnp.concatenate([cache.conv, xr], axis=1)          # (B, 4, W)
+        conv = jnp.einsum("bkw,kw->bw", hist, params["conv_w"]) + params["conv_b"]
+        a, bterm = _gates(params, conv[:, None])
+        h = (a[:, 0] * cache.h + bterm[:, 0])[:, None]
+        new_cache = RGLRUCache(hist[:, 1:], h[:, 0], cache.pos + 1)
+
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return y, new_cache

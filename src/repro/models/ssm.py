@@ -1,0 +1,179 @@
+"""Mamba-2 block — SSD (state-space duality) chunked algorithm [arXiv:2405.21060].
+
+Training/prefill uses the chunked dual form: within-chunk quadratic
+("attention-like") term + cross-chunk linear recurrence over per-chunk states,
+scanned with ``lax.scan`` (TPU-friendly: all matmuls MXU-shaped, recurrence
+carries only (B, H, P, N) states).  Decode is the O(1)-state recurrent update —
+this is what makes the long_500k shape feasible.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rmsnorm_apply, rmsnorm_defs
+from repro.models.params import ParamDef
+
+PyTree = Any
+
+
+def mamba2_defs(cfg: ModelConfig) -> PyTree:
+    D = cfg.d_model
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * G * N
+    return {
+        "in_proj": ParamDef((D, 2 * di + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), (None, "ssm_inner"), scale=0.5),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "D": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "norm": rmsnorm_defs(di, axis="ssm_inner"),
+        "out_proj": ParamDef((di, D), ("ssm_inner", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, ssm_conv-1, conv_dim) — last inputs for causal conv
+    state: jax.Array  # (B, H, P, N)
+    pos: jax.Array
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    di = cfg.d_inner
+    conv_dim = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return MambaCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = Σ_{j<t<=i} dA[..., t]."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.
+
+    x: (b, l, h, p) pre-multiplied inputs; dt: (b, l, h) positive step sizes;
+    A: (h,) negative decay rates; B, C: (b, l, g, n), g groups broadcast over
+    heads.  Returns y: (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    rep = h // g
+
+    xc = x.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, c, chunk, g, n), rep, axis=3)   # (b,c,q,h,n)
+    Cc = jnp.repeat(C.reshape(b, c, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A  # (b,c,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)                               # within-chunk
+    # within-chunk (diagonal blocks): L[i,j] = exp(Σ_{j<t<=i} dA_t)
+    Lseg = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))            # (b,c,h,q,q)
+    xdt = xc * dtc[..., None]
+    Y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Cc, Bc, Lseg, xdt)
+
+    # per-chunk input states: decay from position to chunk end
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)          # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xdt)
+
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                    # (b,c,h)
+
+    def scan_fn(s, inp):
+        st, dec = inp
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (b,c,h,p,n)
+
+    # cross-chunk: contribution of the state entering each chunk
+    state_decay = jnp.exp(dA_cs)                                 # (b,c,q,h)
+    Y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc,
+                       prev_states.astype(Cc.dtype), state_decay)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def mamba2_apply(params, cfg: ModelConfig, x, *, cache: MambaCache | None = None):
+    """x: (B, L, D) -> (B, L, D). Decode path when cache is given (L == 1)."""
+    Bsz, L, D = x.shape
+    di, G, N, H, P = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    conv_dim = di + 2 * G * N
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if cache is None or L > 1:
+        # training forward or prefill: causal depthwise conv along L
+        pad = jnp.zeros((Bsz, cfg.ssm_conv - 1, conv_dim), xbc.dtype)
+        xbc_p = jnp.concatenate([pad, xbc], axis=1)
+        conv = sum(
+            xbc_p[:, i:i + L] * params["conv_w"][i][None, None]
+            for i in range(cfg.ssm_conv)
+        ) + params["conv_b"]
+        conv = jax.nn.silu(conv)
+        xs, B_, C_ = jnp.split(conv, [di, di + G * N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+        # pad to a chunk multiple with dt = 0 (zero decay-delta, zero input
+        # contribution) so the final state is exact
+        chunk = min(cfg.ssm_chunk, L) if L % cfg.ssm_chunk else cfg.ssm_chunk
+        Lp = int(np.ceil(L / chunk)) * chunk
+        if Lp != L:
+            padn = Lp - L
+            xs_p = jnp.pad(xs, ((0, 0), (0, padn), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+            Bp = jnp.pad(B_, ((0, 0), (0, padn), (0, 0)))
+            Cp = jnp.pad(C_, ((0, 0), (0, padn), (0, 0)))
+        else:
+            xs_p, dt_p, Bp, Cp = xs, dt, B_, C_
+        y, final = ssd_chunked(
+            xs_p.reshape(Bsz, Lp, H, P), dt_p, A,
+            Bp.reshape(Bsz, Lp, G, N), Cp.reshape(Bsz, Lp, G, N), chunk)
+        y = y[:, :L]
+        y = y + xs.reshape(Bsz, L, H, P) * params["D"][None, None, :, None]
+        y = y.reshape(Bsz, L, di).astype(x.dtype)
+        new_cache = None
+        if cache is not None:  # prefill: stash conv tail + final SSM state
+            new_cache = MambaCache(xbc_p[:, L:], final, cache.pos + L)
+    else:
+        # single-step recurrence (L == 1)
+        xbc_hist = jnp.concatenate([cache.conv, xbc], axis=1)    # (B, conv, dim)
+        conv = jnp.einsum("bkc,kc->bc", xbc_hist, params["conv_w"]) + params["conv_b"]
+        conv = jax.nn.silu(conv)[:, None]
+        xs, B_, C_ = jnp.split(conv, [di, di + G * N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+        xh = xs.reshape(Bsz, H, P)
+        Bh = jnp.repeat(B_.reshape(Bsz, G, N), H // G, axis=1)    # (B,H,N)
+        Ch = jnp.repeat(C_.reshape(Bsz, G, N), H // G, axis=1)
+        decay = jnp.exp(dt * A)                                   # (B,H)
+        st = cache.state * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt, xh.astype(jnp.float32), Bh.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", st, Ch.astype(jnp.float32)).astype(x.dtype)
+        y = y + xh * params["D"][None, :, None]
+        y = y.reshape(Bsz, 1, di)
+        new_cache = MambaCache(xbc_hist[:, 1:], st, cache.pos + 1)
+
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,14 @@
+from repro.optim.optimizers import Optimizer, sgd, momentum_sgd, adam, adafactor_like
+from repro.optim.lr import constant, cosine, warmup_cosine, smith_lr_range_test
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum_sgd",
+    "adam",
+    "adafactor_like",
+    "constant",
+    "cosine",
+    "warmup_cosine",
+    "smith_lr_range_test",
+]

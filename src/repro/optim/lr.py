@@ -1,0 +1,67 @@
+"""Learning-rate schedules + the paper's configuration rule (Smith 2017).
+
+The paper sets a constant learning rate via an LR range test: geometrically
+sweep the LR, evaluate the loss after one iteration, locate the two "knees"
+(where loss starts decreasing significantly / starts increasing again) and
+take their geometric mean (paper App. G, Fig. 9).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return sched
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        return jnp.where(s < warmup, warm, cos(step - warmup))
+    return sched
+
+
+def smith_lr_range_test(
+    one_step_loss: Callable[[float], float],
+    lr_min: float = 1e-6,
+    lr_max: float = 10.0,
+    n_points: int = 25,
+    drop_frac: float = 0.05,
+) -> tuple[float, np.ndarray, np.ndarray]:
+    """The paper's LR selection rule.
+
+    Args:
+      one_step_loss: fn(lr) -> training loss after ONE iteration from the
+        common initialization (paper App. G).
+      drop_frac: relative decrease/increase threshold defining the knees.
+
+    Returns: (selected_lr, lrs, losses).
+    """
+    lrs = np.geomspace(lr_min, lr_max, n_points)
+    losses = np.array([float(one_step_loss(float(lr))) for lr in lrs])
+    base = losses[0]
+    finite = np.isfinite(losses)
+    # knee 1: first lr where loss drops significantly below the small-lr level
+    dec = np.nonzero(finite & (losses < base * (1 - drop_frac)))[0]
+    if len(dec) == 0:
+        return float(lrs[len(lrs) // 2]), lrs, losses
+    k1 = dec[0]
+    # knee 2: first lr after k1 where loss rises back above the minimum
+    lmin = np.nanmin(np.where(finite, losses, np.nan))
+    inc = [i for i in range(k1 + 1, n_points)
+           if (not finite[i]) or losses[i] > min(base, lmin * (1 + drop_frac) + drop_frac * abs(base))]
+    k2 = inc[0] if inc else n_points - 1
+    lr = float(np.sqrt(lrs[k1] * lrs[k2]))  # geometric mean of the knees
+    return lr, lrs, losses

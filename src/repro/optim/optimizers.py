@@ -1,0 +1,138 @@
+"""Minimal pytree optimizers (optax-style pure functions).
+
+The paper uses plain (sub)gradient descent (DSM) and, for CIFAR/ResNet,
+classical momentum with coefficient 0.9 (Sutskever et al., 2013).  All updates
+are *elementwise* over leaves, so they apply unchanged to gossip-mode params
+that carry a leading worker dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state; update(grads, state, params, step) -> (updates, state).
+
+    `updates` are *deltas to add* to the params (they already include -lr).
+    """
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        return jax.tree.map(lambda g: (-eta * g).astype(g.dtype), grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum_sgd(lr, mu: float = 0.9, nesterov: bool = False) -> Optimizer:
+    """Classical momentum (paper §4 experiment 3: mu = 0.9)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        new_u = jax.tree.map(lambda u, g: (mu * u + g).astype(u.dtype), state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda u, g: (-eta * (mu * u + g)).astype(g.dtype), new_u, grads)
+        else:
+            upd = jax.tree.map(lambda u: (-eta * u).astype(u.dtype), new_u)
+        return upd, new_u
+
+    return Optimizer(init, update, f"momentum{mu}")
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+
+        def upd(mh_, vh_, p, g):
+            u = mh_ / (jnp.sqrt(vh_) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-eta * u).astype(p.dtype)
+
+        return jax.tree.map(upd, mh, vh, params, grads), {"m": m, "v": v}
+
+    return Optimizer(init, update, "adam")
+
+
+def adafactor_like(lr, eps: float = 1e-30, decay: float = 0.8) -> Optimizer:
+    """Memory-lean second-moment optimizer (row/col factored for 2-D leaves).
+
+    Used for very large archs (nemotron) where Adam's fp32 moments dominate
+    per-device HBM in the dry-run memory analysis.
+    """
+    sched = _as_schedule(lr)
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(leaf, params, is_leaf=lambda x: isinstance(x, jax.Array) or hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        b2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def leaf(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                row = b2 * s["row"] + (1 - b2) * g2.mean(-1)
+                col = b2 * s["col"] + (1 - b2) * g2.mean(-2)
+                denom = row[..., :, None] * col[..., None, :] / (
+                    row.mean(-1)[..., None, None] + eps)
+                u = g32 / (jnp.sqrt(denom) + eps)
+                return (-eta * u).astype(p.dtype), {"row": row, "col": col}
+            v = b2 * s["v"] + (1 - b2) * g2
+            return (-eta * g32 / (jnp.sqrt(v) + eps)).astype(p.dtype), {"v": v}
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state)
+        flat_p = tdef.flatten_up_to(params)
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upds = tdef.unflatten([o[0] for o in outs])
+        news = tdef.unflatten([o[1] for o in outs])
+        return upds, news
+
+    return Optimizer(init, update, "adafactor")

@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationResult, WaveBatcher, generate, make_serve_step
+
+__all__ = ["GenerationResult", "WaveBatcher", "generate", "make_serve_step"]

@@ -1,0 +1,117 @@
+"""Batched serving engine: prefill + greedy/temperature decode over KV caches.
+
+Decode-shape dry-runs (decode_32k, long_500k) lower exactly the
+``serve_step`` built here: ONE new token against a seq_len-sized cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+PyTree = Any
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, caches, token [, memory, cross_kvs]) -> (logits, caches).
+
+    This is the function the decode dry-run shapes lower: ONE new token
+    against a seq_len-sized KV cache."""
+
+    def serve_step(params, caches, token, memory=None, cross_kvs=None):
+        return M.decode_step(params, cfg, caches, token, memory=memory,
+                             cross_kvs=cross_kvs)
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray        # (B, n_new)
+    logprobs: np.ndarray      # (B, n_new)
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, *, n_new: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             enc_embeds=None, seed: int = 0) -> GenerationResult:
+    """Prefill the prompt and decode n_new tokens (greedy or sampled)."""
+    B, Lp = prompt.shape
+    max_len = max_len or (Lp + n_new)
+    logits, caches, cross_kvs, memory = M.prefill(
+        params, cfg, prompt, max_len=max_len, enc_embeds=enc_embeds)
+    step = jax.jit(make_serve_step(cfg))
+    key = jax.random.PRNGKey(seed)
+    toks, lps = [], []
+    logits = logits[:, -1]
+    for _ in range(n_new):
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        toks.append(np.asarray(nxt))
+        lps.append(np.asarray(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]))
+        logits, caches = step(params, caches, nxt[:, None].astype(jnp.int32),
+                              memory, cross_kvs)
+        logits = logits[:, -1]
+    return GenerationResult(np.stack(toks, 1), np.stack(lps, 1))
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    n_new: int
+
+
+class WaveBatcher:
+    """Wave-based batched serving: requests are grouped into fixed-size waves
+    of equal prompt length, prefilled together, and decoded in lock-step
+    (one shared cache position per wave — the KV cache tracks a scalar
+    insertion position, so ragged per-slot admission is out of scope; the
+    scheduler pads prompts to the wave's max length instead).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int, max_len: int,
+                 pad_id: int = 0):
+        self.params, self.cfg = params, cfg
+        self.B, self.max_len, self.pad_id = batch_slots, max_len, pad_id
+        self.queue: list[_Request] = []
+        self.done: dict[int, np.ndarray] = {}
+        self._step = jax.jit(make_serve_step(cfg))
+        self._rid = 0
+
+    def submit(self, prompt: np.ndarray, n_new: int) -> int:
+        self._rid += 1
+        self.queue.append(_Request(self._rid, np.asarray(prompt), n_new))
+        return self._rid
+
+    def _next_wave(self) -> list[_Request]:
+        wave, self.queue = self.queue[: self.B], self.queue[self.B:]
+        return wave
+
+    def run_wave(self) -> None:
+        wave = self._next_wave()
+        if not wave:
+            return
+        Lp = max(len(r.prompt) for r in wave)
+        n_new = max(r.n_new for r in wave)
+        prompts = np.full((len(wave), Lp), self.pad_id, np.int32)
+        for i, r in enumerate(wave):  # left-pad so last token is real
+            prompts[i, Lp - len(r.prompt):] = r.prompt
+        res = generate(self.params, self.cfg, jnp.asarray(prompts),
+                       n_new=n_new, max_len=min(self.max_len, Lp + n_new))
+        for i, r in enumerate(wave):
+            self.done[r.rid] = res.tokens[i, : r.n_new]
+
+    def run_until_done(self) -> dict[int, np.ndarray]:
+        while self.queue:
+            self.run_wave()
+        return self.done

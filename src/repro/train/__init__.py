@@ -1,0 +1,4 @@
+from repro.train import checkpoint, loop
+from repro.train.loop import History, train
+
+__all__ = ["checkpoint", "loop", "History", "train"]

@@ -1,0 +1,60 @@
+"""Pytree checkpointing (numpy .npz — no external deps, restartable runs)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # numpy .npz cannot store ml_dtypes (bf16, fp8): widen to fp32;
+            # restore() casts back to the target leaf dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: PyTree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(path, **flat)
+    if step is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump({"step": int(step)}, f)
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (shapes/dtypes preserved)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like = _flatten_with_paths(like)
+    assert set(data.files) == set(flat_like), (
+        sorted(set(data.files) ^ set(flat_like))[:5])
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> int | None:
+    meta = path + ".meta.json"
+    if os.path.exists(meta):
+        with open(meta) as f:
+            return json.load(f)["step"]
+    return None

@@ -1,0 +1,90 @@
+"""Training loop: drives the decentralized (or baseline) train step, logs the
+paper's gradient statistics, and periodically checkpoints.
+
+This is the host-side orchestration layer; the math lives in
+``repro.core.decentralized``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import numpy as np
+
+from repro.core.decentralized import StepMetrics, TrainState, init_state, make_train_step
+from repro.core.gossip import GossipSpec
+from repro.optim import Optimizer
+from repro.train import checkpoint as ckpt_lib
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class History:
+    loss: list[float] = dataclasses.field(default_factory=list)
+    grad_energy: list[float] = dataclasses.field(default_factory=list)
+    grad_spread: list[float] = dataclasses.field(default_factory=list)
+    mean_grad_norm: list[float] = dataclasses.field(default_factory=list)
+    param_spread: list[float] = dataclasses.field(default_factory=list)
+    step_time: list[float] = dataclasses.field(default_factory=list)
+
+    def append(self, m: StepMetrics, dt: float) -> None:
+        self.loss.append(float(m.loss))
+        self.grad_energy.append(float(m.grad_energy))
+        self.grad_spread.append(float(m.grad_spread))
+        self.mean_grad_norm.append(float(m.mean_grad_norm))
+        self.param_spread.append(float(m.param_spread))
+        self.step_time.append(dt)
+
+    def as_arrays(self) -> dict[str, np.ndarray]:
+        return {k: np.asarray(v) for k, v in dataclasses.asdict(self).items()}
+
+
+def train(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    params0: PyTree,
+    optimizer: Optimizer,
+    batches: Iterable[PyTree],
+    *,
+    steps: int,
+    gossip: GossipSpec | None = None,
+    mode: str = "gossip",
+    mesh=None,
+    log_every: int = 50,
+    ckpt_path: str | None = None,
+    ckpt_every: int = 0,
+    verbose: bool = True,
+) -> tuple[TrainState, History]:
+    """Run `steps` iterations; `batches` yields per-step batch pytrees."""
+    step_fn = jax.jit(make_train_step(loss_fn, optimizer, gossip=gossip,
+                                      mode=mode, mesh=mesh))
+    state = init_state(params0, optimizer)
+    hist = History()
+    it = iter(batches)
+    ctx = jax.set_mesh(mesh) if mesh is not None else _nullcontext()
+    with ctx:
+        for k in range(steps):
+            batch = next(it)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = jax.tree.map(lambda x: x.block_until_ready(), metrics)
+            hist.append(metrics, time.perf_counter() - t0)
+            if verbose and (k % log_every == 0 or k == steps - 1):
+                print(f"step {k:5d}  loss {hist.loss[-1]:.5f}  "
+                      f"E {hist.grad_energy[-1]:.3e}  Esp {hist.grad_spread[-1]:.3e}  "
+                      f"spread {hist.param_spread[-1]:.3e}")
+            if ckpt_path and ckpt_every and (k + 1) % ckpt_every == 0:
+                ckpt_lib.save(ckpt_path, state.params, step=k + 1)
+    if ckpt_path:
+        ckpt_lib.save(ckpt_path, state.params, step=steps)
+    return state, hist
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

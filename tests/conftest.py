@@ -1,0 +1,28 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device. Multi-device tests (gossip ppermute, dry-run) spawn
+# subprocesses that set --xla_force_host_platform_device_count themselves.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a snippet in a fresh interpreter with forced host device count."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                         capture_output=True, text=True)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    return res.stdout

@@ -1,0 +1,199 @@
+"""Paper-claim validation: Prop 3.1/3.3 bounds, toy example eq. (78), App. C."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis as A
+from repro.core import topology as T
+
+
+# ---------------------------------------------------------------------------
+# Proposition 3.3 — Monte-Carlo verification of the analytic moments
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [1, 2])
+def test_prop33_monte_carlo(C):
+    rng = np.random.default_rng(0)
+    S, n, M, B = 48, 6, 4, 4
+    grads = rng.normal(size=(S, n)) + 0.5  # nonzero mean gradient
+    gradF = grads.mean(0)
+    sigma2 = float(np.sum(grads.var(0, ddof=0))) * S / (S - 1)  # sample covariance trace
+    pred = A.prop33_moments(M=M, S=S, B=B, C=C,
+                            grad_norm2=float(gradF @ gradF), sigma2=sigma2)
+    mc = A.monte_carlo_moments(grads, M=M, B=B, C=C, n_perm=60, n_batch=30, seed=1)
+    assert np.isclose(mc.E, pred.E, rtol=0.08), (mc.E, pred.E)
+    assert np.isclose(mc.E_sp, pred.E_sp, rtol=0.15), (mc.E_sp, pred.E_sp)
+    # H: prediction is an upper bound within MC noise; lower bound √M||∂F||
+    lower = np.sqrt(M) * np.linalg.norm(gradF)
+    assert mc.H <= pred.H * 1.05
+    assert mc.H >= lower * 0.95
+
+
+def test_prop33_full_batch_degenerate():
+    """B = S, C = M (full replication, full batch): E_sp must vanish."""
+    m = A.prop33_moments(M=4, S=32, B=32, C=4, grad_norm2=1.0, sigma2=2.0)
+    assert np.isclose(m.E_sp, 0.0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Bounds (7) / (8) / (9)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.floats(0.01, 0.99),   # lam2
+    st.floats(0.001, 0.5),   # eta
+    st.integers(2, 200),     # K
+    st.floats(0.1, 10.0),    # E scale
+)
+def test_new_bound_never_exceeds_old(lam2, eta, K, Escale):
+    """Corollary 3.2: bound (7) ≤ bound (8) when E_sp≤E, R_sp≤R, H≤√E, α≤1."""
+    M = 8
+    E = 10.0 * Escale
+    E_sp, H, R, R_sp, alpha = 0.4 * E, 0.8 * np.sqrt(E), 5.0, 2.0, 0.7
+    ks = np.arange(1, K + 1, dtype=float)
+    new = A.bound_new(ks, M=M, eta=eta, dist0=1.0, E=E, E_sp=E_sp, H=H,
+                      R_sp=R_sp, alpha=alpha, lam2=lam2)
+    old = A.bound_old(ks, M=M, eta=eta, dist0=1.0, E=E, R=R, lam2=lam2)
+    assert np.all(new <= old + 1e-9)
+
+
+def test_bounds_decrease_with_spectral_gap():
+    """Better-connected topology (smaller λ2) ⇒ smaller bound (both)."""
+    ks = np.arange(1, 400, dtype=float)
+    kw = dict(M=8, eta=0.05, dist0=1.0, E=8.0, E_sp=2.0, H=2.0, R_sp=0.0, alpha=0.8)
+    b_ring = A.bound_new(ks, lam2=0.95, **kw)
+    b_clique = A.bound_new(ks, lam2=0.0, **kw)
+    assert np.all(b_clique <= b_ring + 1e-12)
+
+
+def test_rsp_zero_kills_third_term():
+    """Same init at every node (R_sp = 0): topology penalty is η-scaled only."""
+    ks = np.array([1.0, 10.0, 100.0])
+    kw = dict(M=8, eta=0.05, dist0=1.0, E=8.0, E_sp=0.0, H=2.0, alpha=0.8)
+    b = A.bound_new(ks, R_sp=0.0, lam2=0.99, **kw)
+    b0 = A.bound_new(ks, R_sp=0.0, lam2=0.0, **kw)
+    # with E_sp = 0 AND R_sp = 0, topology must not matter at all
+    assert np.allclose(b, b0)
+
+
+# ---------------------------------------------------------------------------
+# Toy example (App. F, eq. 78) — exact law
+# ---------------------------------------------------------------------------
+
+
+def _simulate_toy(topology: T.Topology, K: int, eta=0.1, zeta=0.1):
+    """Exact DSM simulation of the toy problem in App. F.1."""
+    M = topology.M
+    lam, projs = T.spectral_projectors(topology.A)
+    # u = left eigenvector for λ2 (real part), normalized per App. F.1
+    rngv = np.real(projs[1] @ np.random.default_rng(1).normal(size=M))
+    u = rngv / np.max(np.abs(rngv))
+    if np.min(u) != -1.0:
+        u = u / -np.min(u) if np.min(u) < 0 else -u / np.max(u)
+    G = u + zeta  # constant row-vector gradient
+    w = np.ones(M)
+    traj = [w.copy()]
+    for _ in range(K):
+        w = w @ topology.A - eta * G
+        traj.append(w.copy())
+    traj = np.asarray(traj)                     # (K+1, M)
+    hat = np.cumsum(traj, 0) / np.arange(1, K + 2)[:, None]
+    j = int(np.argmin(u))
+    F = 1 + zeta * hat[:, j]                    # F(w) = 1 + ζ w
+    return F, u
+
+
+def test_toy_example_eq78_exact():
+    t = T.ring_lattice(100, 4)
+    eta = zeta = 0.1
+    K = 60
+    F_sim, u = _simulate_toy(t, K, eta, zeta)
+    lam2 = float(np.real(t.eigenvalues[1]))
+    ks = np.arange(1, K + 1, dtype=float)
+    F_pred = A.toy_example_objective(ks, lam2=lam2, eta=eta, zeta=zeta)
+    # eq. (78) holds exactly (differentiable linear toy objective)
+    assert np.allclose(F_sim[1:], F_pred, atol=5e-3), (
+        np.max(np.abs(F_sim[1:] - F_pred)))
+
+
+def test_toy_sparser_topology_slower():
+    """Fig. 7(a): cycle (d=2) much slower than clique (d=M-1)."""
+    K = 200
+    F_ring, _ = _simulate_toy(T.undirected_ring(50), K)
+    F_clique, _ = _simulate_toy(T.clique(50), K)
+    assert F_clique[-1] < F_ring[-1] - 0.1
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 procedure + Appendix C horizons
+# ---------------------------------------------------------------------------
+
+
+def test_divergence_iteration_monotone_in_pct():
+    loss = np.exp(-np.linspace(0, 3, 300)) + 0.1
+
+    def bound_fn(K, lam2):
+        return A.bound_old(K, M=8, eta=0.05, dist0=1.0, E=8.0, R=4.0, lam2=lam2)
+
+    k4 = A.predicted_divergence_iteration(
+        bound_fn, lam2_sparse=0.98, lam2_dense=0.0,
+        loss_curve_dense=loss, pct=0.04)
+    k10 = A.predicted_divergence_iteration(
+        bound_fn, lam2_sparse=0.98, lam2_dense=0.0,
+        loss_curve_dense=loss, pct=0.10)
+    assert k4 <= k10
+
+
+def test_new_bound_predicts_later_divergence_than_old():
+    """Table 1's k'_n ≥ k'_o: the refined bound pushes the divergence point out."""
+    loss = np.exp(-np.linspace(0, 3, 500)) + 0.1
+    E, E_sp, H, R, R_sp, alpha, M, eta = 8.0, 0.4, 1.2, 4.0, 0.0, 0.7, 16, 0.05
+
+    def old(K, lam2):
+        return A.bound_old(K, M=M, eta=eta, dist0=1.0, E=E, R=R, lam2=lam2)
+
+    def new(K, lam2):
+        return A.bound_new(K, M=M, eta=eta, dist0=1.0, E=E, E_sp=E_sp, H=H,
+                           R_sp=R_sp, alpha=alpha, lam2=lam2)
+
+    k_old = A.predicted_divergence_iteration(
+        old, lam2_sparse=0.98, lam2_dense=0.0, loss_curve_dense=loss, pct=0.04)
+    k_new = A.predicted_divergence_iteration(
+        new, lam2_sparse=0.98, lam2_dense=0.0, loss_curve_dense=loss, pct=0.04)
+    assert k_new >= k_old
+
+
+def test_appendix_c_horizons_are_huge():
+    """App. C: insensitivity horizons from prior work are astronomically large
+    (K_l ≥ 1e6 for MNIST-like constants) — the paper's motivation."""
+    ring16 = T.undirected_ring(16)
+    kl = A.lian_horizon(L=86.05, M=16, sigma2=12.83, f0=2.3, lam2=ring16.lambda2)
+    assert kl > 1e6
+    klp = A.pu_horizon(L=5.03, M=16, mu=1.0, lam2=ring16.lambda2)
+    assert klp > 1e9
+
+
+def test_beta_decomposition():
+    g = A.GradientConstants(E=16.0, E_sp=4.0, H=2.0, alpha=0.5, M=8)
+    # β = (1/α)·E/(√E_sp·H) = 2 · 16/(2·2) = 8
+    assert np.isclose(g.beta, 8.0)
+    assert np.isclose(g.ratio_E_Esp, 2.0)
+    assert np.isclose(g.ratio_E_H, 2.0)
+
+
+def test_estimate_constants_roundtrip():
+    """estimate_constants on synthetic G samples with known structure."""
+    rng = np.random.default_rng(0)
+    M, n = 8, 32
+    t = T.undirected_ring(M)
+    mean_g = rng.normal(size=(n, 1)) * 0.5
+    samples = [mean_g + 0.3 * rng.normal(size=(n, M)) for _ in range(50)]
+    c = A.estimate_constants(samples, t)
+    assert c.E > c.E_sp > 0
+    assert 0 < c.alpha <= 1
+    assert c.H > 0
+    # H should approach ||E[G]||_F = sqrt(M)*||mean||
+    assert np.isclose(c.H, np.sqrt(M) * np.linalg.norm(mean_g), rtol=0.15)

@@ -1,0 +1,133 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, with
+shape/dtype sweeps and hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import attention as flash_attention_op
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.gossip_mix.ops import gossip_mix_leaf, gossip_mix_pytree
+from repro.kernels.gossip_mix.ref import gossip_mix_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# gossip_mix
+# ---------------------------------------------------------------------------
+
+GOSSIP_SHAPES = [(64,), (1000,), (37, 129), (4, 8, 65), (512, 512), (3, 3)]
+
+
+@pytest.mark.parametrize("shape", GOSSIP_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_gossip_mix_matches_reference(shape, dtype, k):
+    ks = jax.random.split(KEY, 4)
+    w = jax.random.normal(ks[0], shape, dtype)
+    nb = jax.random.normal(ks[1], (k,) + shape, dtype)
+    wt = jax.nn.softmax(jax.random.normal(ks[2], (k + 1,)))
+    up = jax.random.normal(ks[3], shape, dtype)
+    out = gossip_mix_leaf(w, nb, wt, up, 0.1)
+    ref = gossip_mix_reference(w, nb, wt, up, 0.1)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+    assert out.dtype == w.dtype
+
+
+def test_gossip_mix_pytree():
+    params = {"a": jnp.ones((10, 7)), "b": {"c": jnp.arange(5.0)}}
+    nbrs = [jax.tree.map(lambda x: x * (i + 2.0), params) for i in range(2)]
+    upd = jax.tree.map(jnp.ones_like, params)
+    wt = jnp.asarray([0.5, 0.25, 0.25])
+    out = gossip_mix_pytree(params, nbrs, wt, upd, eta=0.1)
+    # a: 0.5*1 + 0.25*2 + 0.25*3 - 0.1 = 1.65
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.65, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 4), st.integers(0, 100))
+def test_gossip_mix_property_random_sizes(n, k, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    w = jax.random.normal(ks[0], (n,))
+    nb = jax.random.normal(ks[1], (k, n))
+    wt = jax.nn.softmax(jax.random.normal(ks[2], (k + 1,)))
+    up = jax.random.normal(ks[3], (n,))
+    out = gossip_mix_leaf(w, nb, wt, up, 0.05)
+    ref = gossip_mix_reference(w, nb, wt, up, 0.05)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_gossip_mix_identity_weights():
+    """weights = [1, 0, ...], eta = 0 ⇒ identity."""
+    w = jax.random.normal(KEY, (100,))
+    nb = jax.random.normal(KEY, (2, 100))
+    out = gossip_mix_leaf(w, nb, jnp.asarray([1.0, 0.0, 0.0]),
+                          jnp.zeros(100), 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Lq, Lkv, H, Hkv, hd, causal, window)
+    (2, 128, 128, 4, 2, 64, True, None),
+    (1, 256, 256, 8, 1, 32, True, 64),     # MQA + sliding window
+    (2, 128, 128, 4, 4, 64, False, None),  # encoder (bidirectional)
+    (1, 64, 64, 2, 2, 128, True, None),
+    (1, 128, 128, 4, 2, 16, True, 32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(case, dtype):
+    B, Lq, Lkv, H, Hkv, hd, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Lq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Lkv, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Lkv, Hkv, hd), dtype)
+    out = flash_attention_op(q, k, v, causal=causal, window=window,
+                             block_q=64, block_kv=64)
+    ref = attention_reference(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_matches_model_blockwise_twin():
+    """The Pallas kernel and the XLA blockwise twin implement the same math."""
+    from repro.models.attention import blockwise_attention
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    a = flash_attention_op(q, k, v, causal=True, block_q=64, block_kv=64)
+    b = blockwise_attention(q, k, v, 0, causal=True, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([32, 64, 128]), st.sampled_from([1, 2, 4]),
+       st.integers(0, 50))
+def test_flash_property_softmax_rows(L, Hkv, seed):
+    """Attention output is a convex combination of V rows: bounded by V range."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    H = Hkv * 2
+    q = jax.random.normal(ks[0], (1, L, H, 16))
+    k = jax.random.normal(ks[1], (1, L, Hkv, 16))
+    v = jax.random.normal(ks[2], (1, L, Hkv, 16))
+    out = flash_attention_op(q, k, v, causal=True, block_q=32, block_kv=32)
+    assert float(out.max()) <= float(v.max()) + 1e-4
+    assert float(out.min()) >= float(v.min()) - 1e-4

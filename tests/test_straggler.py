@@ -1,0 +1,63 @@
+"""Straggler / wall-clock simulation tests (paper §4 Fig. 5 claims)."""
+import numpy as np
+import pytest
+
+from repro.core import straggler as S
+from repro.core import topology as T
+
+
+def test_deterministic_times_topology_free():
+    """With deterministic compute times every topology has the same throughput."""
+    th_ring = S.simulate(T.undirected_ring(16), 100, S.deterministic(1.0)).throughput
+    th_clique = S.simulate(T.clique(16), 100, S.deterministic(1.0)).throughput
+    assert np.isclose(th_ring, th_clique, rtol=1e-9)
+    assert np.isclose(th_ring, 1.0, rtol=1e-9)
+
+
+@pytest.mark.parametrize("sampler", [S.exponential(1.0), S.pareto(2.0, 0.5),
+                                     S.spark_like(), S.asciq_like()])
+def test_sparse_topology_higher_throughput(sampler):
+    """Paper Fig. 5(a): iterations/time grows as connectivity shrinks."""
+    K = 400
+    th = {}
+    for name, topo in [("ring", T.undirected_ring(16)),
+                       ("d8", S and T.ring_lattice(16, 8)),
+                       ("clique", T.clique(16))]:
+        th[name] = S.simulate(topo, K, sampler, seed=3).throughput
+    assert th["ring"] > th["d8"] > th["clique"]
+
+
+def test_throughput_by_degree_monotone():
+    res = S.throughput_by_degree(
+        lambda d: T.ring_lattice(16, d) if d < 15 else T.clique(16),
+        [2, 4, 8], 300, S.spark_like(), seed=1)
+    assert res[2] >= res[4] >= res[8]
+
+
+def test_comm_delay_slows_everyone():
+    t0 = S.simulate(T.undirected_ring(8), 100, S.deterministic(1.0)).throughput
+    t1 = S.simulate(T.undirected_ring(8), 100, S.deterministic(1.0),
+                    comm_delay=0.5).throughput
+    assert t1 < t0
+
+
+def test_completion_monotone():
+    sim = S.simulate(T.expander(12, 4, n_candidates=3), 50, S.exponential(1.0))
+    assert np.all(np.diff(sim.completion, axis=1) > 0)
+
+
+def test_loss_vs_time_combination():
+    sim = S.simulate(T.undirected_ring(8), 60, S.spark_like(), seed=0)
+    loss = np.exp(-np.linspace(0, 2, 61))
+    t, l = S.loss_vs_time(loss, sim)
+    assert len(t) == len(l) == 61
+    assert np.all(np.diff(t) > 0)
+
+
+def test_clique_tracks_global_max():
+    """On the clique, everyone waits for the slowest node of the previous
+    iteration — completion times are (nearly) synchronized."""
+    sim = S.simulate(T.clique(12), 50, S.exponential(1.0), seed=5)
+    spread = sim.completion[:, -1].max() - sim.completion[:, -1].min()
+    # all nodes share the same barrier time up to one iteration's compute
+    assert spread < sim.completion[:, -1].mean() * 0.2

@@ -1,0 +1,138 @@
+"""Topology / consensus-matrix unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+ALL_BUILDERS = [
+    lambda: T.clique(8),
+    lambda: T.undirected_ring(9),
+    lambda: T.ring_lattice(10, 4),
+    lambda: T.directed_ring_lattice(8, 3),
+    lambda: T.torus_2d(3, 4),
+    lambda: T.hypercube(4),
+    lambda: T.star(7),
+    lambda: T.random_regular(12, 3, seed=3),
+    lambda: T.expander(12, 4, seed=1, n_candidates=5),
+]
+
+
+@pytest.mark.parametrize("build", ALL_BUILDERS)
+def test_consensus_matrix_properties(build):
+    t = build()
+    A = t.A
+    assert np.all(A >= 0)
+    assert np.allclose(A.sum(0), 1.0)
+    assert np.allclose(A.sum(1), 1.0)
+    assert np.allclose(A.T @ A, A @ A.T, atol=1e-9)  # normal
+    assert abs(t.eigenvalues[0].real - 1.0) < 1e-9
+    assert t.lambda2 < 1.0 + 1e-12
+
+
+def test_spectral_gap_ordering():
+    M = 16
+    ring = T.undirected_ring(M)
+    expander = T.expander(M, 4, n_candidates=10)
+    clique = T.clique(M)
+    assert ring.spectral_gap < expander.spectral_gap < clique.spectral_gap + 1e-12
+    assert np.isclose(clique.spectral_gap, 1.0)
+
+
+@pytest.mark.parametrize("build", ALL_BUILDERS)
+def test_permutation_decomposition_reconstructs(build):
+    t = build()
+    perms = t.permutations()
+    A2 = np.zeros_like(t.A)
+    for w, p in perms:
+        A2[p, np.arange(t.M)] += w
+        assert sorted(p) == list(range(t.M))  # valid permutation
+    assert np.allclose(A2, t.A, atol=1e-9)
+    assert np.isclose(sum(w for w, _ in perms), 1.0)
+
+
+def test_spectral_projectors_reconstruct():
+    for t in (T.undirected_ring(12), T.hypercube(3), T.expander(10, 4, n_candidates=3)):
+        lam, projs = T.spectral_projectors(t.A)
+        assert np.allclose(sum(projs), np.eye(t.M), atol=1e-8)
+        A2 = sum(l * P for l, P in zip(lam, projs))
+        assert np.allclose(np.real(A2), t.A, atol=1e-7)
+        for P in projs:  # idempotent orthogonal projectors
+            assert np.allclose(P @ P, P, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 20), st.integers(0, 10_000))
+def test_energy_fractions_sum_to_one(M, seed):
+    t = T.undirected_ring(M)
+    rng = np.random.default_rng(seed)
+    G = rng.normal(size=(4, M))
+    D = G - G.mean(1, keepdims=True)
+    e = T.energy_fractions(D, t.A)
+    assert abs(e[1:].sum() - 1.0) < 1e-8
+    assert e[0] == 0.0
+    lam, _ = T.spectral_projectors(t.A)
+    alpha = T.alpha_from_fractions(e, lam)
+    assert 0.0 < alpha <= 1.0 + 1e-9
+
+
+def test_alpha_is_one_when_aligned_with_second_eigenvector():
+    """Paper App. F: ΔG aligned with the λ2 eigenvector ⇒ α = 1."""
+    t = T.undirected_ring(8)
+    lam, projs = T.spectral_projectors(t.A)
+    # a real vector in the λ2 eigenspace
+    v = np.real(projs[1] @ np.random.default_rng(0).normal(size=8))
+    v /= np.linalg.norm(v)
+    e = T.energy_fractions(v[None, :], t.A)
+    alpha = T.alpha_from_fractions(e, lam)
+    assert np.isclose(alpha, 1.0, atol=1e-6)
+
+
+def test_one_peer_exponential_cycles():
+    M = 8
+    tops = [T.one_peer_exponential(M, k) for k in range(3)]
+    prod = tops[2].A @ tops[1].A @ tops[0].A
+    # after log2(M) rounds every node has averaged with everyone: exact consensus
+    assert np.allclose(prod, np.ones((M, M)) / M, atol=1e-9)
+
+
+def test_metropolis_on_irregular_graph():
+    adj = np.zeros((5, 5), dtype=bool)
+    edges = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 3)]
+    for i, j in edges:
+        adj[i, j] = adj[j, i] = True
+    A = T.metropolis_weights(adj)
+    t = T.Topology("custom", A)
+    assert t.spectral_gap > 0
+
+
+def test_kronecker_hierarchical_topology():
+    """Beyond-paper: A_outer ⊗ A_inner is a valid consensus matrix and its
+    spectral gap follows the eigenvalue product rule."""
+    outer = T.clique(2)
+    inner = T.undirected_ring(8)
+    k = T.kronecker(outer, inner)
+    assert k.M == 16
+    A = k.A
+    assert np.allclose(A.sum(0), 1) and np.allclose(A.sum(1), 1)
+    assert np.allclose(A.T @ A, A @ A.T, atol=1e-9)
+    # λ2(A⊗B) = max over products of eigenvalues excluding the (1,1) pair
+    lam_o = np.sort(np.abs(np.linalg.eigvals(outer.A)))[::-1]
+    lam_i = np.sort(np.abs(np.linalg.eigvals(inner.A)))[::-1]
+    prods = sorted((a * b for ia, a in enumerate(lam_o)
+                    for ib, b in enumerate(lam_i) if (ia, ib) != (0, 0)),
+                   reverse=True)
+    assert np.isclose(k.lambda2, prods[0], atol=1e-9)
+    # hierarchical mix == dense Kronecker mix (gossip.hierarchical_mix)
+    import jax.numpy as jnp
+    from repro.core.gossip import GossipSpec, hierarchical_mix, mix_pytree_reference
+
+    x = {"w": jnp.arange(16.0 * 3).reshape(16, 3)}
+    # note kron(outer, inner): worker index = pod*16... here pod*8 + i
+    want = mix_pytree_reference(x, k.A)
+    # hierarchical: inner mixes within blocks — emulate with einsum backend
+    inner_big = T.Topology("inner-big", np.kron(np.eye(2), inner.A))
+    outer_big = T.Topology("outer-big", np.kron(outer.A, np.eye(8)))
+    got = mix_pytree_reference(mix_pytree_reference(x, inner_big.A), outer_big.A)
+    assert np.allclose(np.asarray(got["w"]), np.asarray(want["w"]), atol=1e-5)
