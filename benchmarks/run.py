@@ -2,9 +2,13 @@
 
 Prints ``bench,name,us_per_call,derived`` CSV rows and writes JSON artifacts
 to results/bench/.
+
+Usage: python benchmarks/run.py [--quick] [only_name]
+``--quick`` runs reduced problem sizes where a bench supports it (CI smoke).
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -17,6 +21,7 @@ BENCHES = [
     ("toy_fig7", "benchmarks.bench_toy"),
     ("appC", "benchmarks.bench_appc"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("bus", "benchmarks.bench_bus"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
@@ -24,7 +29,14 @@ BENCHES = [
 def main() -> None:
     import importlib
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = [a for a in sys.argv[1:]]
+    quick = "--quick" in argv
+    if quick:
+        argv.remove("--quick")
+    only = argv[0] if argv else None
+    if only and only not in {n for n, _ in BENCHES}:
+        raise SystemExit(f"unknown bench {only!r}; choose from "
+                         f"{[n for n, _ in BENCHES]}")
     print("bench,name,us_per_call,derived")
     failures = []
     for name, modname in BENCHES:
@@ -33,7 +45,10 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = importlib.import_module(modname)
-            rows = mod.run()
+            kwargs = {}
+            if quick and "quick" in inspect.signature(mod.run).parameters:
+                kwargs["quick"] = True
+            rows = mod.run(**kwargs)
         except Exception as e:  # pragma: no cover
             failures.append((name, repr(e)))
             print(f"{name},ERROR,0,{e!r}")
@@ -41,9 +56,9 @@ def main() -> None:
         dt = (time.perf_counter() - t0) * 1e6
         for r in rows:
             tag = r.get("problem") or r.get("arch") or r.get("dist") or \
-                r.get("heterogeneity") or r.get("combo") or ""
+                r.get("heterogeneity") or r.get("combo") or r.get("topology") or ""
             extra = {k: v for k, v in r.items()
-                     if k not in ("bench", "problem", "arch", "dist")}
+                     if k not in ("bench", "problem", "arch", "dist", "topology")}
             derived = ";".join(f"{k}={v}" for k, v in list(extra.items())[:6])
             print(f"{name},{tag},{dt / max(len(rows), 1):.0f},{derived}")
     if failures:

@@ -1,0 +1,119 @@
+"""Version-adaptive aliases for the JAX sharding API.
+
+The repo is written against the modern API surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``, ``AxisType``);
+older JAX releases (0.4.x) spell these differently or lack them:
+
+* ``shard_map``          — lives in ``jax.experimental.shard_map`` and has no
+                           ``axis_names`` kwarg (partial-manual). We fall back
+                           to *full-manual* mode with ``check_rep=False``:
+                           axes not mentioned in the specs are treated as
+                           replicated inside the body, which is semantically
+                           equivalent for every call site in this repo (the
+                           bodies only issue collectives over the named axes).
+* ``get_current_mesh``   — the new abstract-mesh getter when available, else
+                           the mesh installed by the ``with mesh:`` context
+                           (``thread_resources.env.physical_mesh``).
+* ``set_mesh``           — ``jax.set_mesh`` when available; on old JAX a
+                           ``Mesh`` is itself a context manager.
+* ``make_mesh``          — drops the ``axis_types`` kwarg when unsupported.
+
+Keep every mesh/shard_map touchpoint routed through this module so a JAX
+upgrade is a one-file change.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["AxisType", "get_current_mesh", "make_mesh", "set_mesh",
+           "shard_map", "to_shardings"]
+
+_HAS_NEW_API = hasattr(jax, "shard_map")
+
+
+class _AxisTypeShim:
+    """Stand-in for jax.sharding.AxisType on versions that predate it."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeShim)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates the missing ``axis_types`` kwarg."""
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _HAS_NEW_API:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # old JAX: Mesh is a context manager
+
+
+def get_current_mesh():
+    """The ambient mesh (abstract or physical), or None when unset/empty."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is not None and not getattr(mesh, "empty", True):
+            return mesh
+    try:  # old JAX: the `with mesh:` context sets the resource env
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        if mesh is not None and not getattr(mesh, "empty", False):
+            return mesh
+    except Exception:  # pragma: no cover - jax internals moved
+        pass
+    return None
+
+
+def to_shardings(mesh, tree):
+    """Make an in_/out_shardings pytree acceptable to jax.jit.
+
+    New JAX accepts bare ``PartitionSpec`` leaves (resolved against the
+    ambient mesh); old JAX requires concrete ``NamedSharding``s, so wrap
+    every spec leaf against ``mesh``. ``None`` leaves stay None (inferred).
+    """
+    if _HAS_NEW_API:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec) else s,
+        tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: set[str] | None = None,
+) -> Callable:
+    """Partial-manual shard_map when supported, full-manual otherwise.
+
+    ``axis_names`` restricts manual collectives to those axes (new JAX). Old
+    JAX runs fully manual with replication checking off; axes absent from the
+    specs behave as replicated inside the body, which matches every use here.
+    """
+    if _HAS_NEW_API:
+        kwargs = {"axis_names": set(axis_names)} if axis_names else {}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)

@@ -1,0 +1,371 @@
+"""Flat-buffer gossip bus: one bulk collective per Birkhoff permutation.
+
+The naive ``ppermute`` gossip backend issues one tiny ``jax.lax.ppermute``
+per *parameter leaf* per permutation — for a transformer that is hundreds of
+latency-bound collectives per consensus step, exactly the regime the paper's
+wall-clock argument assumes away (sparse topologies only win when the
+per-iteration exchange is bandwidth-bound; see EXPERIMENTS.md §Perf).
+
+The bus instead:
+
+1. flattens the whole parameter pytree (and, in the fused train step, the
+   optimizer-update pytree) into one contiguous ``(M, R, C)`` buffer per
+   dtype group, with cached per-leaf offsets (`BusLayout`);
+2. runs consensus as **one bulk collective per non-identity permutation** of
+   the Birkhoff decomposition ``A = Σ_p w_p·P_p`` — collective count per
+   gossip step drops from ``leaves × perms`` to ``perms``;
+3. consumes the neighbor buffers directly with the fused Pallas
+   ``gossip_mix`` kernel, so mix + weighted self term + ``−η·update`` is a
+   single VMEM pass over the flat buffer ((k+2) reads + 1 write per element
+   instead of 3(k+2) accesses for the unfused axpy chain);
+4. optionally splits the buffer into pipeline chunks: chunk *c*'s ppermute
+   is issued before chunk *c−1*'s fused compute, so on hardware with async
+   collectives the permute of the next chunk overlaps the mix of the current
+   one (double-buffered software pipeline; ``nchunks=1`` keeps the
+   one-collective-per-permutation guarantee).
+
+Without a mesh the bus runs a single-process emulation: the permutation is a
+row gather on the leading worker dim, numerically identical to the
+distributed path (same kernel, same summation order) — this is what the
+fp32-exactness tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.kernels.gossip_mix.kernel import (
+    DEFAULT_BLOCK_C,
+    DEFAULT_BLOCK_R,
+    gossip_mix_2d,
+)
+
+PyTree = Any
+
+__all__ = ["BusLayout", "plan_layout", "pack", "unpack", "mix_bus",
+           "mix_and_update_time_varying", "bulk_collectives_per_step"]
+
+# Rows are padded to a multiple of 32 sublanes — the strictest dtype tile
+# (int8/fp8); fp32/bf16 need only 8/16, so 32 keeps one rule for all groups.
+_SUBLANE = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class _Group:
+    """Leaves of one dtype packed into one (lead..., R, C) buffer."""
+
+    dtype: jnp.dtype
+    leaf_ids: tuple[int, ...]      # indices into the flattened pytree
+    sizes: tuple[int, ...]         # per-leaf element counts
+    offsets: tuple[int, ...]       # per-leaf start offset in the flat row
+    n: int                         # total payload elements (un-padded)
+    rows: int                      # R — padded row count, multiple of 32
+    cols: int                      # C — lane-aligned row width
+    block_r: int                   # tile rows actually used by the kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class BusLayout:
+    """Cached flatten/unflatten plan for a parameter pytree."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]   # trailing (per-worker) shapes
+    groups: tuple[_Group, ...]
+
+    @property
+    def n_buffers(self) -> int:
+        return len(self.groups)
+
+    def padded_elements(self) -> int:
+        return sum(g.rows * g.cols for g in self.groups)
+
+    def payload_elements(self) -> int:
+        return sum(g.n for g in self.groups)
+
+
+def _pick_block_r(rows: int, block_r: int) -> int:
+    """Largest tile height ≤ block_r dividing rows (rows is a mult. of 32)."""
+    b = (min(block_r, rows) // _SUBLANE) * _SUBLANE
+    while b > _SUBLANE and rows % b:
+        b -= _SUBLANE
+    return max(b, _SUBLANE)  # rows % _SUBLANE == 0 by construction
+
+
+_LAYOUT_CACHE: dict[Any, BusLayout] = {}
+
+
+def plan_layout(tree: PyTree, *, lead_ndim: int = 1,
+                block_r: int = DEFAULT_BLOCK_R,
+                block_c: int = DEFAULT_BLOCK_C) -> BusLayout:
+    """Build (or fetch from cache) the bus layout for ``tree``.
+
+    ``lead_ndim`` leading dims of every leaf (the worker dim in gossip mode)
+    are kept out of the flat row; the remaining trailing elements are laid
+    out contiguously, grouped by dtype, padded to a (rows, cols) tile grid.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(x.shape[lead_ndim:]) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+    key = (treedef, shapes, dtypes, lead_ndim, block_r, block_c)
+    cached = _LAYOUT_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    by_dtype: dict[jnp.dtype, list[int]] = {}
+    for i, dt in enumerate(dtypes):
+        by_dtype.setdefault(dt, []).append(i)
+    groups = []
+    for dt, ids in by_dtype.items():
+        sizes = tuple(int(np.prod(shapes[i], dtype=np.int64)) for i in ids)
+        offsets = tuple(int(o) for o in np.cumsum((0,) + sizes[:-1]))
+        n = int(sum(sizes))
+        cols = block_c
+        rows = -(-max(n, 1) // cols)                       # ceil div
+        rows = -(-rows // _SUBLANE) * _SUBLANE             # sublane pad
+        groups.append(_Group(dtype=dt, leaf_ids=tuple(ids), sizes=sizes,
+                             offsets=offsets, n=n, rows=rows, cols=cols,
+                             block_r=_pick_block_r(rows, block_r)))
+    layout = BusLayout(treedef=treedef, shapes=shapes, groups=tuple(groups))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def pack(tree: PyTree, layout: BusLayout, *, lead_ndim: int = 1) -> list[jax.Array]:
+    """Flatten ``tree`` into one (lead..., R, C) buffer per dtype group."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    bufs = []
+    for g in layout.groups:
+        parts = [jnp.reshape(leaves[i], leaves[i].shape[:lead_ndim] + (-1,))
+                 for i in g.leaf_ids]
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
+        pad = g.rows * g.cols - g.n
+        if pad:
+            width = [(0, 0)] * lead_ndim + [(0, pad)]
+            flat = jnp.pad(flat, width)
+        bufs.append(flat.reshape(flat.shape[:lead_ndim] + (g.rows, g.cols)))
+    return bufs
+
+
+def unpack(bufs: Sequence[jax.Array], layout: BusLayout, *,
+           lead_ndim: int = 1) -> PyTree:
+    """Inverse of :func:`pack` (padding is dropped)."""
+    leaves: list[jax.Array | None] = [None] * len(layout.shapes)
+    for g, buf in zip(layout.groups, bufs):
+        lead = buf.shape[:lead_ndim]
+        flat = buf.reshape(lead + (-1,))
+        for i, size, off in zip(g.leaf_ids, g.sizes, g.offsets):
+            leaves[i] = jax.lax.slice_in_dim(
+                flat, off, off + size, axis=lead_ndim
+            ).reshape(lead + layout.shapes[i])
+    return layout.treedef.unflatten(leaves)
+
+
+# ---------------------------------------------------------------------------
+# Bulk consensus over packed buffers
+# ---------------------------------------------------------------------------
+
+
+def _split_perms(spec) -> tuple[float, list[tuple[float, np.ndarray]]]:
+    """(identity weight, non-identity (weight, perm) list) of spec's A."""
+    M = spec.topology.M
+    ident = np.arange(M)
+    a0 = 0.0
+    others = []
+    for w, perm in spec.permutations:
+        if np.array_equal(perm, ident):
+            a0 += w
+        else:
+            others.append((w, perm))
+    return a0, others
+
+
+def bulk_collectives_per_step(spec, nchunks: int = 1) -> int:
+    """Bulk collectives one bus gossip step issues (vs leaves × perms)."""
+    _, others = _split_perms(spec)
+    return len(others) * max(nchunks, 1)
+
+
+def _chunk_starts(rows: int, block_r: int, nchunks: int) -> list[tuple[int, int]]:
+    """Split ``rows`` into ≤ nchunks (start, size) tiles of whole blocks."""
+    nblocks = rows // block_r
+    nchunks = max(1, min(nchunks, nblocks))
+    base, extra = divmod(nblocks, nchunks)
+    out, start = [], 0
+    for c in range(nchunks):
+        size = (base + (1 if c < extra else 0)) * block_r
+        out.append((start, size))
+        start += size
+    return out
+
+
+def _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights, eta, perms,
+                         nchunks, interpret, donate, groups):
+    """Distributed path: bulk ppermute per permutation inside shard_map.
+
+    With ``nchunks > 1`` the buffer is software-pipelined: the permutes for
+    chunk c+1 are issued *before* the fused kernel for chunk c, so async
+    collectives (TPU collective-permute-start/-done) overlap the previous
+    chunk's VMEM pass — the classic double-buffered pattern, two chunks of
+    neighbor data live at a time.
+    """
+    M = spec.topology.M
+    axes = spec.worker_axes if len(spec.worker_axes) > 1 else spec.worker_axes[0]
+    pairs = [[(int(perm[j]), j) for j in range(M)] for _, perm in perms]
+
+    in_specs = tuple(P(spec.worker_axes) for _ in bufs)
+    if upd_bufs is not None:
+        in_specs = in_specs + tuple(P(spec.worker_axes) for _ in upd_bufs)
+
+    def f(*args):
+        xs = args[:len(bufs)]
+        us = args[len(bufs):] if upd_bufs is not None else [None] * len(xs)
+        outs = []
+        for x, u, g in zip(xs, us, groups):
+            x2 = x[0]                        # per-shard worker dim is 1
+            u2 = None if u is None else u[0]
+            chunks = _chunk_starts(g.rows, min(g.block_r, g.rows), nchunks)
+
+            def permute(c):
+                start, size = chunks[c]
+                x_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
+                return jnp.stack([jax.lax.ppermute(x_c, axes, pr)
+                                  for pr in pairs])
+
+            nbrs = permute(0)
+            pieces = []
+            for c, (start, size) in enumerate(chunks):
+                nxt = permute(c + 1) if c + 1 < len(chunks) else None
+                w_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
+                u_c = None if u2 is None else jax.lax.slice_in_dim(
+                    u2, start, start + size, axis=0)
+                pieces.append(gossip_mix_2d(
+                    w_c, nbrs, weights, u_c, eta,
+                    block_r=min(g.block_r, size), block_c=g.cols,
+                    interpret=interpret, donate=donate))
+                nbrs = nxt
+            out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+            outs.append(out[None])
+        return tuple(outs)
+
+    out = compat.shard_map(
+        f, mesh=mesh, in_specs=in_specs,
+        out_specs=tuple(P(spec.worker_axes) for _ in bufs),
+        axis_names=set(spec.worker_axes),
+    )(*(tuple(bufs) + tuple(upd_bufs or ())))
+    return list(out)
+
+
+def _mix_buffers_local(bufs, upd_bufs, weights, eta, perms, nchunks,
+                       interpret, donate, groups):
+    """Single-process emulation: permutation = row gather on the worker dim.
+
+    Numerically identical to the sharded path — same kernel, same summation
+    order — and mirrors its chunking (each chunk of rows runs through its
+    own kernel call) so the pipelined slicing is exercised without a mesh.
+    """
+    outs = []
+    for gi, (x, g) in enumerate(zip(bufs, groups)):
+        M = x.shape[0]
+        chunks = _chunk_starts(g.rows, min(g.block_r, g.rows), nchunks)
+        pieces = []
+        for start, size in chunks:
+            x_c = jax.lax.slice_in_dim(x, start, start + size, axis=1)
+            w2 = x_c.reshape(M * size, g.cols)
+            nbrs = jnp.stack([
+                x_c[np.asarray(perm)].reshape(M * size, g.cols)
+                for _, perm in perms])
+            u2 = None
+            if upd_bufs is not None:
+                u2 = jax.lax.slice_in_dim(
+                    upd_bufs[gi], start, start + size, axis=1
+                ).reshape(M * size, g.cols)
+            pieces.append(gossip_mix_2d(
+                w2, nbrs, weights, u2, eta,
+                block_r=min(g.block_r, size), block_c=g.cols,
+                interpret=interpret, donate=donate).reshape(M, size, g.cols))
+        outs.append(pieces[0] if len(pieces) == 1 else
+                    jnp.concatenate(pieces, 1))
+    return outs
+
+
+def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
+            eta: float | jax.Array = 1.0, nchunks: int = 1,
+            interpret: bool | None = None, block_r: int = DEFAULT_BLOCK_R,
+            block_c: int = DEFAULT_BLOCK_C) -> PyTree:
+    """Consensus (+ optional fused update) over the flat parameter bus.
+
+    Computes ``P_j ← Σ_i A[i,j]·P_i − eta·U_j`` for every worker j in one
+    fused pass per dtype group. ``updates=None`` is the pure-mix path used by
+    ``mix_pytree(backend='fused')``; the train step passes the optimizer
+    deltas (which already include −lr) with ``eta=-1.0`` so the fused pass
+    lands exactly on ``mix(params) + update``.
+
+    With a mesh, the worker dim must be sharded over ``spec.worker_axes`` and
+    each non-identity Birkhoff permutation becomes ONE bulk ``ppermute`` of
+    the whole buffer (`nchunks` > 1 splits it into that many pipelined
+    collectives). Without a mesh, a numerically-identical gather emulation
+    runs single-process.
+
+    ``interpret=None`` (default) auto-selects: the compiled Pallas kernel on
+    TPU, interpret (Python-emulation, correctness-only) mode elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    a0, others = _split_perms(spec)
+    weights = jnp.asarray([a0] + [w for w, _ in others], jnp.float32)
+    layout = plan_layout(params, lead_ndim=1, block_r=block_r, block_c=block_c)
+    bufs = pack(params, layout)
+    upd_bufs = None
+    if updates is not None:
+        upd_bufs = pack(updates, layout)
+    eta_arr = jnp.asarray([eta], jnp.float32) if updates is not None else None
+
+    if not others:  # degenerate (M == 1): no communication at all
+        mixed = bufs if updates is None else [
+            (b * weights[0] - eta_arr[0] * u).astype(b.dtype)
+            for b, u in zip(bufs, upd_bufs)]
+        return unpack(mixed, layout)
+
+    if mesh is None:
+        mesh = compat.get_current_mesh()
+    if mesh is not None:
+        mixed = _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights,
+                                     eta_arr, others, nchunks, interpret,
+                                     donate=not interpret,
+                                     groups=layout.groups)
+    else:
+        mixed = _mix_buffers_local(bufs, upd_bufs, weights, eta_arr, others,
+                                   nchunks, interpret, donate=False,
+                                   groups=layout.groups)
+    return unpack(mixed, layout)
+
+
+def mix_and_update_time_varying(params: PyTree, spec, updates: PyTree,
+                                step: jax.Array, mesh=None, *,
+                                eta: float = -1.0, **kw) -> PyTree:
+    """Fused mix+update under 'one_peer_exp' time-varying gossip.
+
+    ``lax.switch`` over the log2(M) one-peer rounds; every branch is the
+    fused bus pass for that round's pairwise permutation topology (a single
+    bulk collective — degree 1)."""
+    import dataclasses as _dc
+
+    from repro.core.topology import one_peer_exponential
+
+    M = spec.topology.M
+    tau = int(np.log2(M))
+    assert 1 << tau == M, "one_peer_exp needs M a power of two"
+    branches = []
+    for k in range(tau):
+        sub = _dc.replace(spec, topology=one_peer_exponential(M, k),
+                          time_varying=None)
+        branches.append(lambda p, u, s=sub: mix_bus(
+            p, s, mesh, updates=u, eta=eta, **kw))
+    return jax.lax.switch(step % tau, branches, params, updates)

@@ -135,6 +135,10 @@ def make_train_step(
         if gossip is None:
             raise ValueError("gossip mode requires a GossipSpec")
         M = gossip.topology.M
+        # Fused bus path: mix + update land in ONE Pallas VMEM pass over the
+        # flat parameter buffer (mix_first only — adapt-then-combine needs
+        # the update applied before the mix, so it stays on the generic path).
+        fuse_update = gossip.resolved_backend() == "fused" and mix_first
 
         def step(state: TrainState, batch: PyTree) -> tuple[TrainState, StepMetrics]:
             # batch leaves: (M, per_worker_batch, ...)
@@ -154,19 +158,36 @@ def make_train_step(
                         p, gossip, state.step, mesh)
                 return gossip_lib.mix_pytree(p, gossip, mesh)
 
-            if gossip.period > 1:
-                mixed = jax.lax.cond(
-                    state.step % gossip.period == 0, do_mix, lambda p: p, state.params
-                )
-            else:
-                mixed = do_mix(state.params)
+            def apply_update(p):
+                return jax.tree.map(lambda m, u: m + u.astype(m.dtype), p, updates)
 
-            if mix_first:
-                new_params = jax.tree.map(lambda m, u: m + u.astype(m.dtype), mixed, updates)
+            if fuse_update:
+                from repro.core import bus
+
+                def do_mix_update(p):
+                    # updates already carry −lr ⇒ eta = −1 gives mix(p) + u
+                    if gossip.time_varying:
+                        return bus.mix_and_update_time_varying(
+                            p, gossip, updates, state.step, mesh, eta=-1.0)
+                    return bus.mix_bus(p, gossip, mesh, updates=updates,
+                                       eta=-1.0)
+
+                if gossip.period > 1:
+                    new_params = jax.lax.cond(
+                        state.step % gossip.period == 0,
+                        do_mix_update, apply_update, state.params)
+                else:
+                    new_params = do_mix_update(state.params)
+            elif mix_first:
+                if gossip.period > 1:
+                    mixed = jax.lax.cond(
+                        state.step % gossip.period == 0, do_mix, lambda p: p,
+                        state.params)
+                else:
+                    mixed = do_mix(state.params)
+                new_params = apply_update(mixed)
             else:
-                stepped = jax.tree.map(
-                    lambda p, u: p + u.astype(p.dtype), state.params, updates
-                )
+                stepped = apply_update(state.params)
                 new_params = gossip_lib.mix_pytree(stepped, gossip, mesh) \
                     if gossip.period == 1 else jax.lax.cond(
                         state.step % gossip.period == 0, do_mix, lambda p: p, stepped)

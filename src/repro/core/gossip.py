@@ -18,6 +18,13 @@ Backends (selected via :class:`GossipSpec`):
                    TPU-native rendering of the paper's sparse topology.
 * ``allreduce``  — clique fast path: ``pmean`` over the worker axes (this is
                    the PS / ring-allreduce baseline the paper compares with).
+* ``fused``      — the flat-buffer gossip bus (`repro.core.bus`): the whole
+                   parameter pytree is packed into one contiguous buffer, the
+                   consensus runs as ONE bulk collective per non-identity
+                   Birkhoff permutation (vs leaves × perms for ``ppermute``),
+                   and the mix (+ optimizer update, in the train step) is a
+                   single fused Pallas VMEM pass. See EXPERIMENTS.md §Perf for
+                   the collective-count / HBM-traffic model.
 
 All backends are numerically interchangeable (tests assert allclose vs the
 dense oracle).
@@ -33,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.topology import Topology
 
 __all__ = ["GossipSpec", "mix_pytree", "mix_reference", "make_mixer"]
@@ -46,7 +54,7 @@ class GossipSpec:
 
     Attributes:
       topology: the Topology (consensus matrix A, M workers).
-      backend: 'einsum' | 'ppermute' | 'allreduce' | 'auto'.
+      backend: 'einsum' | 'ppermute' | 'allreduce' | 'fused' | 'auto'.
       worker_axes: mesh axis name(s) the worker dimension is sharded over,
         e.g. ('data',) or ('pod', 'data') for multi-pod.
       period: gossip every `period` optimizer steps (1 = paper's synchronous
@@ -131,7 +139,7 @@ def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn) -> PyTree:
     def f(p):
         return jax.tree.map(leaf_fn, p)
 
-    return jax.shard_map(
+    return compat.shard_map(
         f,
         mesh=mesh,
         in_specs=(specs,),
@@ -143,11 +151,19 @@ def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn) -> PyTree:
 def mix_pytree(params: PyTree, spec: GossipSpec, mesh=None) -> PyTree:
     """Consensus step over the parameter pytree (leaves have leading M dim)."""
     backend = spec.resolved_backend()
+    if backend not in ("einsum", "fused", "allreduce", "ppermute"):
+        raise ValueError(f"unknown gossip backend {backend!r}")
     if backend == "einsum":
         return _einsum_mix(params, spec)
+    if backend == "fused":
+        from repro.core import bus  # local import: bus pulls in Pallas
+
+        # mesh=None falls back to the bus's single-process gather emulation
+        # (numerically identical to the sharded path, same fused kernel).
+        return bus.mix_bus(params, spec, mesh)
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:  # pragma: no cover - interactive use
+        mesh = compat.get_current_mesh()
+        if mesh is None:  # pragma: no cover - interactive use
             return _einsum_mix(params, spec)
     if backend == "allreduce":
         return _shard_map_mix(

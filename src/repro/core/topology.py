@@ -30,6 +30,7 @@ __all__ = [
     "one_peer_exponential",
     "metropolis_weights",
     "uniform_weights",
+    "circulant_decomposition",
     "permutation_decomposition",
     "spectral_gap",
     "second_eigenvalue_modulus",
@@ -103,7 +104,16 @@ class Topology:
         return idx[idx != i]
 
     def permutations(self) -> list[tuple[float, np.ndarray]]:
-        """Decompose A into weighted permutations (for ppermute lowering)."""
+        """Decompose A into weighted permutations (for ppermute lowering).
+
+        Circulant topologies use the closed-form offset decomposition (one
+        permutation per graph offset, identity included — the minimum number
+        of collectives); everything else falls back to Birkhoff peeling.
+        """
+        if self.circulant_offsets is not None:
+            out = circulant_decomposition(self.A)
+            if out is not None:
+                return out
         return permutation_decomposition(self.A)
 
 
@@ -387,6 +397,30 @@ def alpha_from_fractions(e: np.ndarray, lambdas: np.ndarray) -> float:
 # ---------------------------------------------------------------------------
 # Permutation decomposition (Birkhoff-style peeling on the graph support)
 # ---------------------------------------------------------------------------
+
+
+def circulant_decomposition(A: np.ndarray, tol: float = 1e-12) -> list[tuple[float, np.ndarray]] | None:
+    """Closed-form decomposition of a circulant A into cyclic-shift perms.
+
+    Column 0's support gives the shift offsets (source of node 0 at offset d
+    is node d) and their weights; one cyclic permutation per offset
+    reconstructs A exactly iff A is truly circulant — verified, with None
+    returned otherwise so callers can fall back to Birkhoff peeling.
+    """
+    A = np.asarray(A, np.float64)
+    M = A.shape[0]
+    cols = np.arange(M)
+    recon = np.zeros_like(A)
+    out: list[tuple[float, np.ndarray]] = []
+    for d in np.nonzero(A[:, 0] > tol)[0]:
+        w = float(A[d, 0])
+        perm = (cols + d) % M
+        recon[perm, cols] += w
+        out.append((w, perm))
+    if not np.allclose(recon, A, atol=1e-9):
+        return None
+    out.sort(key=lambda t: -t[0])
+    return out
 
 
 def permutation_decomposition(A: np.ndarray, tol: float = 1e-12) -> list[tuple[float, np.ndarray]]:

@@ -1,6 +1,7 @@
 """Pallas TPU kernel: fused gossip-mix + SGD update.
 
-One VMEM pass computes  out = a₀·w + Σ_d a_{d+1}·nbr_d − η·u  over 2-D tiles.
+One VMEM pass computes  out = a₀·w + Σ_d a_{d+1}·nbr_d − η·u  over 2-D tiles
+(the update term is optional: the pure-consensus variant skips reading u).
 
 Memory traffic per element: (k + 2) reads + 1 write in a single pass, versus
 2(k + 2) reads + (k + 2) writes for the unfused chain of axpys — the gossip
@@ -12,6 +13,10 @@ Tiling: inputs are reshaped to (R, C) with C a multiple of 128 (lane width)
 and R tiled by BLOCK_R sublanes; neighbor buffers are stacked on a leading
 dim and each tile of every buffer is resident in VMEM simultaneously —
 VMEM footprint = (k + 2) · BLOCK_R · BLOCK_C · 4 B, sized ≤ ~4 MiB.
+
+``donate=True`` aliases the self buffer to the output
+(``input_output_aliases``), making the pass in-place on HBM — used by the
+flat-buffer gossip bus (`repro.core.bus`) whose packed buffer is a temporary.
 """
 from __future__ import annotations
 
@@ -25,41 +30,55 @@ DEFAULT_BLOCK_R = 256
 DEFAULT_BLOCK_C = 512
 
 
-def _kernel(w_ref, nbr_ref, wts_ref, upd_ref, eta_ref, out_ref, *, k: int):
+def _kernel(w_ref, nbr_ref, wts_ref, *rest, k: int, has_update: bool):
     acc = w_ref[...].astype(jnp.float32) * wts_ref[0]
     for d in range(k):  # k is static — unrolled adds, single pass
         acc += nbr_ref[d].astype(jnp.float32) * wts_ref[d + 1]
-    acc -= eta_ref[0] * upd_ref[...].astype(jnp.float32)
+    if has_update:
+        upd_ref, eta_ref, out_ref = rest
+        acc -= eta_ref[0] * upd_ref[...].astype(jnp.float32)
+    else:
+        (out_ref,) = rest
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
 def gossip_mix_2d(
-    w: jax.Array,          # (R, C)
-    neighbors: jax.Array,  # (k, R, C)
-    weights: jax.Array,    # (k + 1,) float32
-    update: jax.Array,     # (R, C)
-    eta: jax.Array,        # (1,) float32
+    w: jax.Array,                 # (R, C)
+    neighbors: jax.Array,         # (k, R, C)
+    weights: jax.Array,           # (k + 1,) float32
+    update: jax.Array | None = None,  # (R, C), optional
+    eta: jax.Array | None = None,     # (1,) float32, required with update
     *,
     block_r: int = DEFAULT_BLOCK_R,
     block_c: int = DEFAULT_BLOCK_C,
     interpret: bool = False,
+    donate: bool = False,
 ) -> jax.Array:
     k, R, C = neighbors.shape
     block_r = min(block_r, R)
     block_c = min(block_c, C)
     assert R % block_r == 0 and C % block_c == 0, (R, C, block_r, block_c)
+    has_update = update is not None
     grid = (R // block_r, C // block_c)
-    return pl.pallas_call(
-        functools.partial(_kernel, k=k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
-            pl.BlockSpec((k, block_r, block_c), lambda i, j: (0, i, j)),
-            pl.BlockSpec((k + 1,), lambda i, j: (0,)),
+    in_specs = [
+        pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        pl.BlockSpec((k, block_r, block_c), lambda i, j: (0, i, j)),
+        pl.BlockSpec((k + 1,), lambda i, j: (0,)),
+    ]
+    args = [w, neighbors, weights]
+    if has_update:
+        assert eta is not None, "update without eta"
+        in_specs += [
             pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
             pl.BlockSpec((1,), lambda i, j: (0,)),
-        ],
+        ]
+        args += [update, eta]
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, has_update=has_update),
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), w.dtype),
+        input_output_aliases={0: 0} if donate else {},
         interpret=interpret,
-    )(w, neighbors, weights, update, eta)
+    )(*args)

@@ -1,8 +1,16 @@
-"""jit'd wrapper: fused gossip-mix + update over arbitrary parameter pytrees.
+"""jit'd wrappers: fused gossip-mix + update over arbitrary parameter pytrees.
 
-Flattens every leaf, pads to the 2-D tile grid, runs the Pallas kernel, and
-restores shapes.  `interpret=True` (default on CPU) executes the kernel body
-in Python for validation; on TPU pass interpret=False.
+Two entry points:
+
+* :func:`gossip_mix_leaf` — one leaf of any shape, padded to the 2-D tile
+  grid and run through the Pallas kernel (kept for tests / ad-hoc use).
+* :func:`gossip_mix_pytree` — the whole pytree packs ONCE into the flat bus
+  layout (`repro.core.bus.BusLayout`, cached flatten/unflatten with per-leaf
+  offsets) and runs ONE kernel call per dtype group, instead of the old
+  per-leaf Python loop of pad/stack/kernel dispatches.
+
+`interpret=True` (default, for CPU) executes the kernel body in Python for
+validation; on TPU pass interpret=False.
 """
 from __future__ import annotations
 
@@ -47,14 +55,24 @@ def gossip_mix_leaf(
 
 def gossip_mix_pytree(params: PyTree, neighbor_params: list[PyTree],
                       weights: jax.Array, updates: PyTree, eta,
-                      *, interpret: bool = True) -> PyTree:
-    """Apply the fused kernel leaf-wise over a parameter pytree."""
-    flat_w, tdef = jax.tree.flatten(params)
-    flat_nbrs = [tdef.flatten_up_to(nb) for nb in neighbor_params]
-    flat_up = tdef.flatten_up_to(updates)
+                      *, interpret: bool = True,
+                      block_r: int = DEFAULT_BLOCK_R,
+                      block_c: int = DEFAULT_BLOCK_C) -> PyTree:
+    """Fused kernel over a pytree via the flat bus layout (one pack, one
+    kernel dispatch per dtype group — not one per leaf)."""
+    from repro.core import bus
+
+    layout = bus.plan_layout(params, lead_ndim=0,
+                             block_r=block_r, block_c=block_c)
+    self_bufs = bus.pack(params, layout, lead_ndim=0)
+    nbr_bufs = [bus.pack(nb, layout, lead_ndim=0) for nb in neighbor_params]
+    upd_bufs = bus.pack(updates, layout, lead_ndim=0)
+    weights = weights.astype(jnp.float32)
+    eta_arr = jnp.asarray([eta], jnp.float32)
     outs = []
-    for i, w in enumerate(flat_w):
-        nb = jnp.stack([fn[i] for fn in flat_nbrs])
-        outs.append(gossip_mix_leaf(w, nb, weights, flat_up[i], eta,
-                                    interpret=interpret))
-    return tdef.unflatten(outs)
+    for gi, g in enumerate(layout.groups):
+        nbrs = jnp.stack([nb[gi] for nb in nbr_bufs])
+        outs.append(gossip_mix_2d(
+            self_bufs[gi], nbrs, weights, upd_bufs[gi], eta_arr,
+            block_r=g.block_r, block_c=g.cols, interpret=interpret))
+    return bus.unpack(outs, layout, lead_ndim=0)

@@ -197,7 +197,8 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
     wa = worker_axes(mesh)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    from repro import compat
+    with compat.set_mesh(mesh):
         defs = M.model_defs(cfg)
         params_abs = abstract_tree(defs, jnp.dtype(cfg.param_dtype))
         ins = input_specs(cfg, shape_name, mesh, mode)
@@ -222,9 +223,11 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
             batch_spec = shard_lib.batch_pspecs(cfg, mesh, "train", mode,
                                                 worker_internal=worker_internal)
             batch_spec = {k: batch_spec[k] for k in ins}
-            fn = jax.jit(step, in_shardings=(state_spec, batch_spec),
-                         out_shardings=(state_spec, None),
-                         donate_argnums=(0,) if donate else ())
+            fn = jax.jit(
+                step,
+                in_shardings=compat.to_shardings(mesh, (state_spec, batch_spec)),
+                out_shardings=compat.to_shardings(mesh, (state_spec, None)),
+                donate_argnums=(0,) if donate else ())
             lowered = fn.lower(state_abs, ins)
             n_tokens = spec["global_batch"] * spec["seq_len"]
         elif kind == "prefill":
@@ -247,7 +250,8 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
                     return logits, caches
                 args = (params_abs, ins["tokens"])
                 in_sh = (pspec, P(b_ax, None))
-            fn = jax.jit(fn_prefill, in_shardings=in_sh)
+            fn = jax.jit(fn_prefill,
+                         in_shardings=compat.to_shardings(mesh, in_sh))
             lowered = fn.lower(*args)
             n_tokens = spec["global_batch"] * spec["seq_len"]
         else:  # decode
@@ -259,16 +263,16 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
             b_ax = shard_lib._div(gb, mesh, wa[0] if len(wa) == 1 else wa)
             if cfg.encoder_layers:
                 ckv_spec = shard_lib.cross_kv_pspecs(cfg, mesh, gb)
-                fn = jax.jit(serve, in_shardings=(
-                    pspec, cache_spec, P(b_ax, None), P(b_ax, None, None), ckv_spec),
-                    out_shardings=(None, cache_spec),
+                fn = jax.jit(serve, in_shardings=compat.to_shardings(mesh, (
+                    pspec, cache_spec, P(b_ax, None), P(b_ax, None, None), ckv_spec)),
+                    out_shardings=compat.to_shardings(mesh, (None, cache_spec)),
                     donate_argnums=(1,) if donate else ())
                 lowered = fn.lower(params_abs, ins["caches"], ins["tokens"],
                                    ins["memory"], ins["cross_kvs"])
             else:
-                fn = jax.jit(serve, in_shardings=(
-                    pspec, cache_spec, P(b_ax, None)),
-                    out_shardings=(None, cache_spec),
+                fn = jax.jit(serve, in_shardings=compat.to_shardings(mesh, (
+                    pspec, cache_spec, P(b_ax, None))),
+                    out_shardings=compat.to_shardings(mesh, (None, cache_spec)),
                     donate_argnums=(1,) if donate else ())
                 lowered = fn.lower(params_abs, ins["caches"], ins["tokens"])
             n_tokens = spec["global_batch"]  # one token per sequence

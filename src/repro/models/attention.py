@@ -192,9 +192,9 @@ def _is_ring(cache: KVCache, window: int | None) -> bool:
 def _seq_sharded_cache(cache_k: jax.Array) -> bool:
     """True when the decode cache is sequence-sharded over 'model' (KV heads
     don't divide the model axis — see launch.shardings.cache_pspecs)."""
-    import jax.sharding as jshard
+    from repro import compat
 
-    mesh = jshard.get_abstract_mesh()
+    mesh = compat.get_current_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return False
     msize = mesh.shape["model"]

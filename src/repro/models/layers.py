@@ -116,11 +116,12 @@ def _cap_shard(buf: jax.Array) -> jax.Array:
     """Pin the capacity dim of the (E, C, D) expert buffer to 'model' —
     with replicated expert weights the FFN becomes fully local (no TP psum
     on the 2.5x-expanded buffer). §Perf hillclimb B."""
-    import jax.sharding as jshard
     from jax.sharding import PartitionSpec as P
 
-    mesh = jshard.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    from repro import compat
+
+    mesh = compat.get_current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return buf
     if buf.shape[-2] % mesh.shape["model"]:
         return buf
@@ -161,11 +162,12 @@ def moe_apply(
         # Partial-manual shard_map over the batch axes: dispatch gathers are
         # device-local by construction (XLA SPMD replicates batched gathers
         # otherwise — §Perf hillclimb B it3). Expert weights stay 'model'-auto.
-        import jax.sharding as jshard
         from jax.sharding import PartitionSpec as P
 
-        mesh = jshard.get_abstract_mesh()
-        wa = tuple(a for a in (mesh.axis_names if mesh and not mesh.empty else ())
+        from repro import compat
+
+        mesh = compat.get_current_mesh()
+        wa = tuple(a for a in (mesh.axis_names if mesh is not None else ())
                    if a != "model")
         n_shards = 1
         for a in wa:
@@ -177,9 +179,9 @@ def moe_apply(
                 y, aux = jax.vmap(lambda s: _moe_tokens(params, cfg, s))(xb)
                 return y, jax.lax.pmean(aux.mean(), wa)
 
-            y, aux = jax.shard_map(f, mesh=mesh, in_specs=(spec,),
-                                   out_specs=(spec, P()),
-                                   axis_names=set(wa))(x)
+            y, aux = compat.shard_map(f, mesh=mesh, in_specs=(spec,),
+                                      out_specs=(spec, P()),
+                                      axis_names=set(wa))(x)
             if cfg.n_shared_experts:
                 y = y + _shared_expert(params, cfg, x)
             return y, aux

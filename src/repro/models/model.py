@@ -251,10 +251,11 @@ def _act_shard(x, cfg: ModelConfig):
     mode = cfg.shard_activations
     if not mode:
         return x
-    import jax.sharding as jshard
     from jax.sharding import PartitionSpec as P
 
-    mesh = jshard.get_abstract_mesh()
+    from repro import compat
+
+    mesh = compat.get_current_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return x
     if mode == "batch":

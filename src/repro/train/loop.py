@@ -13,6 +13,7 @@ from typing import Any, Callable, Iterable
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core.decentralized import StepMetrics, TrainState, init_state, make_train_step
 from repro.core.gossip import GossipSpec
 from repro.optim import Optimizer
@@ -58,12 +59,20 @@ def train(
     verbose: bool = True,
 ) -> tuple[TrainState, History]:
     """Run `steps` iterations; `batches` yields per-step batch pytrees."""
+    # Donating the state makes the step in-place on HBM: the params / opt
+    # buffers (and the gossip bus pack buffers) reuse the incoming allocation
+    # instead of doubling the parameter footprint every iteration. The
+    # caller's params0 leaves are copied first — donation would otherwise
+    # delete them out from under the caller on backends where it is real.
     step_fn = jax.jit(make_train_step(loss_fn, optimizer, gossip=gossip,
-                                      mode=mode, mesh=mesh))
+                                      mode=mode, mesh=mesh),
+                      donate_argnums=(0,))
+    params0 = jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x,
+                           params0)
     state = init_state(params0, optimizer)
     hist = History()
     it = iter(batches)
-    ctx = jax.set_mesh(mesh) if mesh is not None else _nullcontext()
+    ctx = compat.set_mesh(mesh) if mesh is not None else _nullcontext()
     with ctx:
         for k in range(steps):
             batch = next(it)

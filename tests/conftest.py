@@ -1,5 +1,6 @@
 import os
 import sys
+import types
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device. Multi-device tests (gossip ppermute, dry-run) spawn
@@ -8,6 +9,55 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+
+def _ensure_hypothesis() -> None:
+    """Shim `hypothesis` when absent so the suite still collects everywhere.
+
+    Property tests (@given) skip with a clear reason instead of erroring the
+    whole module at import; every non-hypothesis test in the file runs
+    normally. Install the real package (requirements-dev.txt) to run them.
+    """
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+
+    def given(*_a, **_kw):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps): pytest must not treat
+            # the strategy-bound params as fixtures, nor follow __wrapped__
+            def wrapper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def _strategy(*_a, **_kw):  # placeholder — tests are skipped before use
+        return None
+
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__is_shim__ = True
+    for name in ("integers", "floats", "sampled_from", "booleans", "lists",
+                 "tuples", "one_of", "just", "composite", "text"):
+        setattr(st, name, _strategy)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_ensure_hypothesis()
 
 
 @pytest.fixture(scope="session")

@@ -18,11 +18,16 @@ KEY = jax.random.PRNGKey(0)
 # gossip_mix
 # ---------------------------------------------------------------------------
 
-GOSSIP_SHAPES = [(64,), (1000,), (37, 129), (4, 8, 65), (512, 512), (3, 3)]
+# Fast lane: small/odd shapes in fp32; big shapes and the bf16 sweep are
+# heavy on CPU interpret mode and run under `-m slow`.
+GOSSIP_SHAPES = [(64,), (37, 129), (3, 3)] + [
+    pytest.param(s, marks=pytest.mark.slow)
+    for s in [(1000,), (4, 8, 65), (512, 512)]]
+GOSSIP_DTYPES = [jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow)]
 
 
 @pytest.mark.parametrize("shape", GOSSIP_SHAPES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", GOSSIP_DTYPES)
 @pytest.mark.parametrize("k", [1, 2, 4])
 def test_gossip_mix_matches_reference(shape, dtype, k):
     ks = jax.random.split(KEY, 4)
@@ -86,7 +91,8 @@ FLASH_CASES = [
 
 
 @pytest.mark.parametrize("case", FLASH_CASES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_flash_attention_matches_reference(case, dtype):
     B, Lq, Lkv, H, Hkv, hd, causal, window = case
     ks = jax.random.split(KEY, 3)

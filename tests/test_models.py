@@ -16,6 +16,12 @@ from repro.optim import momentum_sgd
 
 KEY = jax.random.PRNGKey(0)
 
+# Full per-arch sweeps are heavy on CPU (~4 min): plain `pytest -q` smokes a
+# dense and a MoE representative; `pytest -m slow` sweeps every family.
+FAST_ARCHS = {"granite-3-2b", "mixtral-8x7b"}
+ARCH_SWEEP = [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+              for a in ARCH_NAMES]
+
 
 def _batch(cfg, B=2, L=32):
     b = {"tokens": jax.random.randint(KEY, (B, L + 1), 0, cfg.vocab_size)}
@@ -24,7 +30,7 @@ def _batch(cfg, B=2, L=32):
     return b
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
 def test_smoke_forward_and_loss(arch):
     cfg = get_config(arch, reduced=True)
     params = M.init(KEY, cfg)
@@ -41,7 +47,7 @@ def test_smoke_forward_and_loss(arch):
     assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.5
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
 def test_smoke_one_train_step(arch):
     """One decentralized train step on a 2-worker ring (einsum backend, CPU)."""
     cfg = get_config(arch, reduced=True)
@@ -63,7 +69,7 @@ def test_smoke_one_train_step(arch):
         assert not bool(jnp.any(jnp.isnan(leaf)))
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
 def test_smoke_decode_consistency(arch):
     """prefill + 1 decode step ≡ uncached forward (per-arch, reduced).
 
@@ -106,6 +112,7 @@ def test_scan_equals_unrolled():
     assert np.isclose(float(l_u), float(l_s), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_remat_does_not_change_loss():
     cfg = get_config("gemma-2b", reduced=True)
     cfg_r = dataclasses.replace(cfg, remat=True)

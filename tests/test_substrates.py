@@ -164,6 +164,7 @@ def test_train_loop_decreases_loss(tmp_path):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_generate_greedy_deterministic():
     cfg = get_config("gemma-2b", reduced=True)
     params = M.init(KEY, cfg)
@@ -175,6 +176,7 @@ def test_generate_greedy_deterministic():
     assert np.all(r1.logprobs <= 0)
 
 
+@pytest.mark.slow
 def test_wave_batcher_serves_all_requests():
     cfg = get_config("granite-3-2b", reduced=True)
     params = M.init(KEY, cfg)
