@@ -1,0 +1,61 @@
+"""Event-driven simulator benchmarks: engine event throughput (timing-only
+and with real JAX train steps) plus the virtual-time speedup of ring vs
+clique under the heavy-tail straggler scenario. Writes results/bench/sim.json.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import topology as T
+from repro.sim import Engine, SyncGossip, scenarios
+
+
+def _timing_only(topo, rounds: int, seed: int = 7):
+    eng = Engine(topo, scenarios.heavy_tail("spark", seed=seed))
+    t0 = time.perf_counter()
+    eng.run(SyncGossip(executor=None), until_round=rounds)
+    dt = time.perf_counter() - t0
+    K = rounds
+    vtime = eng.trace.completion_matrix(K)[:, -1].mean()
+    return {"events": len(eng.trace), "wall_s": dt,
+            "events_per_sec": len(eng.trace) / dt,
+            "virtual_time": float(vtime),
+            "throughput_it_per_vtime": K / float(vtime)}
+
+
+def _real_training(topo, rounds: int, protocol: str = "sync", seed: int = 0):
+    problem = common.problem_linear(S=256, n=16, seed=seed)
+    t0 = time.perf_counter()
+    r = common.run_sim(problem, topo, rounds=rounds, lr=0.1, seed=seed,
+                       protocol=protocol, eval_every=0,
+                       scenario=scenarios.heavy_tail("spark", seed=7))
+    dt = time.perf_counter() - t0
+    _, losses = r.loss_curve()
+    return {"events": len(r.trace), "wall_s": dt,
+            "events_per_sec": len(r.trace) / dt,
+            "virtual_time": float(r.virtual_time),
+            "final_loss": float(losses[-1])}
+
+
+def run(quick: bool = False) -> list[dict]:
+    M = 4 if quick else 16
+    timing_rounds = 100 if quick else 1000
+    train_rounds = 12 if quick else 100  # M=4: ~50 compute events in quick
+    rows = []
+
+    ring = _timing_only(T.undirected_ring(M), timing_rounds)
+    clique = _timing_only(T.clique(M), timing_rounds)
+    speedup = ring["throughput_it_per_vtime"] / clique["throughput_it_per_vtime"]
+    rows.append({"bench": "sim", "topology": f"ring-{M}", "mode": "timing",
+                 **ring, "vtime_speedup_vs_clique": speedup})
+    rows.append({"bench": "sim", "topology": f"clique-{M}", "mode": "timing",
+                 **clique})
+
+    for proto in ("sync", "async", "stale"):
+        row = _real_training(T.undirected_ring(M), train_rounds, protocol=proto)
+        rows.append({"bench": "sim", "topology": f"ring-{M}",
+                     "mode": f"train-{proto}", **row})
+
+    common.save_json("sim", rows)
+    return rows

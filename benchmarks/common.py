@@ -118,3 +118,28 @@ def run_dsm(problem, topo: T.Topology, *, steps=150, lr=0.3, B=16, seed=0,
             stats.append((float(m.grad_energy), float(m.grad_spread),
                           float(m.mean_grad_norm)))
     return np.asarray(losses), stats, parts
+
+
+def run_sim(problem, topo: T.Topology, *, rounds=100, lr=0.3, B=16, seed=0,
+            protocol="sync", scenario=None, eval_every=1, **sim_kw):
+    """Train `problem` on the event-driven simulator (repro.sim): same
+    batching contract as run_dsm, real losses on a virtual clock. Returns
+    the SimRun (eval_curve() gives global loss vs virtual time)."""
+    from repro.train.loop import run_simulated
+
+    (arrays, labels, params0, loss, name) = problem
+    M_ = topo.M
+    parts = pad_to_equal(random_split(len(arrays[0]), M_, seed=seed))
+    batcher = WorkerBatcher(arrays, parts, batch_size=B, seed=seed)
+    full = tuple(jnp.asarray(a) for a in arrays)
+
+    def batches():
+        while True:
+            yield tuple(jnp.asarray(a) for a in batcher.next())
+
+    return run_simulated(
+        loss, replicate_for_workers(params0, M_), sgd(lr), batches(),
+        gossip=GossipSpec(topology=topo, backend="einsum"),
+        protocol=protocol, scenario=scenario, rounds=rounds,
+        eval_fn=(lambda p: float(loss(p, full))) if eval_every else None,
+        eval_every=eval_every, **sim_kw)

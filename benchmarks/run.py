@@ -22,6 +22,7 @@ BENCHES = [
     ("appC", "benchmarks.bench_appc"),
     ("kernels", "benchmarks.bench_kernels"),
     ("bus", "benchmarks.bench_bus"),
+    ("sim", "benchmarks.bench_sim"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

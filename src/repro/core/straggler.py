@@ -1,4 +1,4 @@
-"""Straggler / wall-clock simulation (paper §4, Fig. 5, App. G).
+"""Straggler / wall-clock timing model (paper §4, Fig. 5, App. G).
 
 The paper's second claim: sparse topologies converge faster in *wall-clock*
 time even with zero communication delay, because a transient straggler only
@@ -7,12 +7,15 @@ stalls its out-neighbors.  Model (synchronous local barrier):
     t_j(k+1) = max_{i ∈ N_j ∪ {j}} t_i(k) + T_j(k+1)
 
 with T_j(k) the random computation time.  For the clique this degenerates to
-the global barrier  t(k+1) = max_j t_j(k) + max_j T_j(k+1)-ish behaviour and
-throughput collapses to the slowest node each round.
+the global barrier and throughput collapses to the slowest node each round.
 
-Distributions include heavy-tail empirical shapes matching the paper's Spark
-and ASCI-Q traces (Fig. 10): a tight body plus a small-probability multi-x
-slowdown tail.
+This module is now a thin compatibility layer over the event-driven
+simulator (``repro.sim``): the computation-time distributions live in
+``repro.sim.scenarios`` (re-exported here unchanged), and :func:`simulate`
+runs the engine's synchronous-gossip protocol in timing-only mode instead of
+the old standalone barrier recursion — same numbers, one event model. For
+simulations that execute *real* train steps (loss vs. virtual wall-clock,
+async/stale protocols, churn), use ``repro.train.loop.run_simulated``.
 """
 from __future__ import annotations
 
@@ -22,70 +25,22 @@ from typing import Callable
 import numpy as np
 
 from repro.core.topology import Topology
+from repro.sim.scenarios import (  # noqa: F401  (re-exports, legacy API)
+    DISTRIBUTIONS,
+    TimeSampler,
+    asciq_like,
+    deterministic,
+    exponential,
+    pareto,
+    spark_like,
+    uniform,
+)
 
-TimeSampler = Callable[[np.random.Generator, tuple[int, ...]], np.ndarray]
-
-
-# ---------------------------------------------------------------------------
-# Computation-time distributions
-# ---------------------------------------------------------------------------
-
-
-def deterministic(mean: float = 1.0) -> TimeSampler:
-    return lambda rng, shape: np.full(shape, mean)
-
-
-def uniform(low: float = 0.8, high: float = 1.2) -> TimeSampler:
-    return lambda rng, shape: rng.uniform(low, high, shape)
-
-
-def exponential(mean: float = 1.0) -> TimeSampler:
-    return lambda rng, shape: rng.exponential(mean, shape)
-
-
-def pareto(alpha: float = 2.5, xm: float = 0.6) -> TimeSampler:
-    """Pareto with shape alpha, scale xm (heavy tail for alpha ≤ ~2.5)."""
-    return lambda rng, shape: xm * (1.0 + rng.pareto(alpha, shape))
-
-
-def spark_like(base: float = 1.0, jitter: float = 0.05,
-               p_slow: float = 0.05, slow_factor: float = 4.0) -> TimeSampler:
-    """Empirical shape of the paper's Spark-cluster CDF (Fig. 10a): tight body
-    around the typical time + occasional multi-x slowdowns (GC, contention)."""
-
-    def sample(rng: np.random.Generator, shape):
-        t = base * rng.lognormal(0.0, jitter, shape)
-        slow = rng.random(shape) < p_slow
-        return np.where(slow, t * rng.uniform(2.0, slow_factor, shape), t)
-
-    return sample
-
-
-def asciq_like(base: float = 1.0) -> TimeSampler:
-    """ASCI-Q-style (Fig. 10b): OS noise — frequent small interruptions plus
-    rare long preemptions (heavier tail than spark_like)."""
-
-    def sample(rng: np.random.Generator, shape):
-        t = base * (1.0 + 0.02 * rng.standard_gamma(1.0, shape))
-        slow = rng.random(shape) < 0.01
-        return np.where(slow, t + base * rng.exponential(8.0, shape), t)
-
-    return sample
-
-
-DISTRIBUTIONS: dict[str, Callable[..., TimeSampler]] = {
-    "deterministic": deterministic,
-    "uniform": uniform,
-    "exponential": exponential,
-    "pareto": pareto,
-    "spark": spark_like,
-    "asciq": asciq_like,
-}
-
-
-# ---------------------------------------------------------------------------
-# Event-driven simulation
-# ---------------------------------------------------------------------------
+__all__ = [
+    "TimeSampler", "DISTRIBUTIONS", "deterministic", "uniform", "exponential",
+    "pareto", "spark_like", "asciq_like", "SimResult", "simulate",
+    "loss_vs_time", "throughput_by_degree",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,24 +71,33 @@ def simulate(
     comm_delay: float = 0.0,
     seed: int = 0,
 ) -> SimResult:
-    """Run the local-barrier time recursion for K iterations.
+    """Run the local-barrier time recursion for K iterations on the event
+    engine (timing-only synchronous gossip — no parameter values).
+
+    Computation times are pre-drawn exactly as the legacy recursion drew
+    them (one ``sampler(rng, (M, K))`` on ``default_rng(seed)``), so results
+    are bit-identical to the historical implementation.
 
     comm_delay: per-hop communication delay added to each neighbor wait (the
       paper's main experiments use 0 — "even when communication costs are
       negligible").
     """
+    from repro.sim import Engine, Scenario, SyncGossip, scenarios
+
     M = topology.M
     rng = np.random.default_rng(seed)
-    T = sampler(rng, (M, K))
-    # dependency mask: dep[i, j] = node j waits for node i (in-neighbors + self)
-    dep = (topology.A > 0).astype(bool)
-    t = np.zeros((M, K + 1))
-    for k in range(K):
-        # start_j = max over i with dep[i, j] of (t_i(k) + comm_delay·[i≠j])
-        waits = np.where(dep, t[:, k][:, None] + comm_delay * (~np.eye(M, dtype=bool)), -np.inf)
-        start = waits.max(axis=0)
-        t[:, k + 1] = start + T[:, k]
-    return SimResult(completion=t, comm_delay=comm_delay)
+    T = np.asarray(sampler(rng, (M, K)), dtype=np.float64)
+    scenario = Scenario(
+        name="legacy-straggler",
+        compute=scenarios.tabulated(T),
+        link_delay=scenarios.constant_delay(comm_delay),
+        seed=seed,
+    )
+    eng = Engine(topology, scenario)
+    eng.run(SyncGossip(executor=None), until_round=K)
+    completion = eng.trace.completion_matrix(K)
+    assert not np.isnan(completion).any(), "sync run left incomplete rounds"
+    return SimResult(completion=completion, comm_delay=comm_delay)
 
 
 def loss_vs_time(

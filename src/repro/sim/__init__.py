@@ -1,0 +1,36 @@
+"""Event-driven wall-clock simulator: real training under virtual clocks.
+
+The paper's Fig. 5 claim — sparse topologies win in *wall-clock* time — is a
+statement about schedules, not values. This subsystem closes the gap between
+the repo's throughput model and its optimizer: a deterministic discrete-event
+:class:`~repro.sim.engine.Engine` advances per-worker virtual clocks while
+pluggable :mod:`~repro.sim.protocols` (synchronous local-barrier gossip,
+AD-PSGD-style asynchronous pairwise averaging, stale/delayed gossip) execute
+*real* JAX train steps, so loss-vs-virtual-time curves come from actual
+optimization, under composable :mod:`~repro.sim.scenarios` (straggler
+distributions, link delays, node churn, topology switches).
+
+Entry points: ``repro.train.loop.run_simulated`` (one-call driver) or the
+Engine/Protocol API directly. ``repro.core.straggler.simulate`` is now a thin
+timing-only wrapper over this engine.
+"""
+from repro.sim import engine, protocols, scenarios, trace
+from repro.sim.engine import Engine, Event
+from repro.sim.protocols import (
+    PROTOCOLS,
+    AsyncPairwise,
+    BatchCache,
+    StaleGossip,
+    SyncGossip,
+    TrainExecutor,
+)
+from repro.sim.scenarios import DISTRIBUTIONS, Scenario
+from repro.sim.trace import Trace, TraceRecord, time_to_target
+
+__all__ = [
+    "engine", "protocols", "scenarios", "trace",
+    "Engine", "Event", "Trace", "TraceRecord", "time_to_target",
+    "Scenario", "DISTRIBUTIONS", "PROTOCOLS",
+    "SyncGossip", "AsyncPairwise", "StaleGossip",
+    "TrainExecutor", "BatchCache",
+]

@@ -1,0 +1,158 @@
+"""Deterministic discrete-event scheduler for decentralized training.
+
+The engine owns *time*: a priority queue of events ordered by
+``(virtual_time, insertion_seq)``, per-worker seeded RNG streams, node
+liveness, and the current topology. A :class:`~repro.sim.protocols.Protocol`
+owns *values*: it reacts to events by scheduling computations, sending
+messages, and (when an executor is attached) running real JAX train steps.
+
+Determinism guarantees
+----------------------
+* Ties in virtual time break by insertion order (a monotone sequence
+  counter), which is itself a pure function of the event history.
+* Every stochastic draw happens on a per-worker ``np.random.Generator``
+  spawned from the scenario seed via ``SeedSequence.spawn``; worker j's
+  durations / partner choices / outgoing-link delays are drawn from stream j
+  in j's local event order, so they cannot be perturbed by how other
+  workers' events interleave.
+* ``FAIL``/``JOIN`` bump a per-worker *epoch*; in-flight events scheduled
+  under an older epoch are silently dropped at pop time, making churn
+  cancellation deterministic.
+
+Together: same (scenario, protocol, seed) ⇒ identical event trace, identical
+final parameters (``tests/test_sim_engine.py`` asserts both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any
+
+import numpy as np
+
+from repro.core.topology import Topology
+from repro.sim import scenarios as scen_lib
+from repro.sim import trace as trace_lib
+from repro.sim.trace import ARRIVAL, COMPUTE_DONE, FAIL, JOIN, SWITCH
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int
+    kind: str
+    worker: int          # affected / destination worker (-1 for SWITCH)
+    src: int = -1        # source worker (ARRIVAL)
+    round: int = 0       # iteration index the event concerns
+    epoch: int = 0       # liveness epoch of `worker` at schedule time
+    payload: Any = None  # protocol data (e.g. a params snapshot); not traced
+
+
+class Engine:
+    """Event queue + virtual clocks; see module docstring."""
+
+    def __init__(self, topology: Topology, scenario: scen_lib.Scenario | None = None):
+        self.topology = topology
+        self.scenario = scenario or scen_lib.Scenario()
+        self.M = topology.M
+        ss = np.random.SeedSequence(self.scenario.seed)
+        children = ss.spawn(self.M + 1)
+        self.rngs = [np.random.default_rng(s) for s in children[: self.M]]
+        self.rng_global = np.random.default_rng(children[self.M])
+        self.clock = 0.0
+        self.alive = np.ones(self.M, dtype=bool)
+        self.epoch = np.zeros(self.M, dtype=int)
+        self.trace = trace_lib.Trace(self.M)
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = itertools.count()
+        self._preload_environment_events()
+
+    # -- scheduling -------------------------------------------------------
+
+    def schedule(self, time: float, kind: str, worker: int, *, src: int = -1,
+                 round: int = 0, payload: Any = None) -> Event:
+        if time < self.clock:
+            raise ValueError(f"cannot schedule into the past ({time} < {self.clock})")
+        epoch = int(self.epoch[worker]) if worker >= 0 else 0
+        ev = Event(time, next(self._seq), kind, worker, src=src, round=round,
+                   epoch=epoch, payload=payload)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def _preload_environment_events(self) -> None:
+        for t, w, kind in self.scenario.churn:
+            self.schedule(t, FAIL if kind == "fail" else JOIN, w)
+        for t, topo in self.scenario.switches:
+            if topo.M != self.M:
+                raise ValueError("topology switch must preserve worker count")
+            self.schedule(t, SWITCH, -1, payload=topo)
+
+    # -- stochastic draws (per-worker streams) ----------------------------
+
+    def compute_duration(self, worker: int, round: int) -> float:
+        d = float(self.scenario.compute(self.rngs[worker], worker, round))
+        if not d > 0.0:
+            raise ValueError(f"compute duration must be positive, got {d}")
+        return d
+
+    def link_delay(self, src: int, dst: int) -> float:
+        d = float(self.scenario.link_delay(self.rngs[src], src, dst))
+        if d < 0.0:
+            raise ValueError(f"link delay must be >= 0, got {d}")
+        return d
+
+    def choose(self, worker: int, options: np.ndarray) -> int:
+        """Uniform choice on the worker's own stream (e.g. gossip partner)."""
+        return int(self.rngs[worker].choice(options))
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self, protocol, *, until_round: int | None = None,
+            max_events: int | None = None,
+            max_time: float | None = None) -> trace_lib.Trace:
+        """Drain the event queue through `protocol`.
+
+        until_round: protocols stop *scheduling* new computations past this
+          round (the queue then drains naturally).
+        max_events / max_time: hard stops for open-ended scenarios.
+        """
+        if (self.scenario.has_churn or self.scenario.has_switches) and \
+                not getattr(protocol, "supports_churn", False):
+            raise NotImplementedError(
+                f"protocol {type(protocol).__name__} does not support "
+                "churn/topology-switch scenarios (use async or stale gossip)")
+        protocol.bind(self, stop_round=until_round)
+        protocol.start()
+        processed = 0
+        while self._heap:
+            if max_events is not None and processed >= max_events:
+                break
+            _, _, ev = heapq.heappop(self._heap)
+            if max_time is not None and ev.time > max_time:
+                break
+            if ev.kind in (COMPUTE_DONE, ARRIVAL) and \
+                    ev.epoch != self.epoch[ev.worker]:
+                continue  # cancelled by a FAIL/JOIN since it was scheduled
+            self.clock = ev.time
+            if ev.kind == FAIL:
+                self.alive[ev.worker] = False
+                self.epoch[ev.worker] += 1
+            elif ev.kind == JOIN:
+                self.alive[ev.worker] = True
+                self.epoch[ev.worker] += 1
+            elif ev.kind == SWITCH:
+                self.topology = ev.payload
+            info = protocol.handle(ev) or {}
+            self.trace.record(trace_lib.TraceRecord(
+                seq=ev.seq, t=ev.time, kind=ev.kind, worker=ev.worker,
+                src=ev.src, round=ev.round, loss=info.get("loss")))
+            processed += 1
+        self.trace.meta.update({
+            "scenario": self.scenario.describe(),
+            "topology": self.topology.name,
+            "protocol": getattr(protocol, "name", type(protocol).__name__),
+            "events": processed,
+            "final_time": self.clock,
+        })
+        return self.trace

@@ -1,0 +1,494 @@
+"""Pluggable consensus protocols executed by the event engine.
+
+All three protocols speak the same engine API (``bind`` / ``start`` /
+``handle``) and drive *real* JAX train steps over a stacked parameter pytree
+(leading worker dim M, the same layout as ``repro.core.decentralized``):
+
+* :class:`SyncGossip` — the paper's synchronous local-barrier DSM: worker j
+  starts round k+1 only once every in-neighbor's round-k estimate has
+  arrived. Values are computed with the *actual* ``make_train_step`` (the
+  same jitted program the non-simulated loop runs), so under deterministic
+  compute times the parameter trajectory bit-matches ``train()``. The
+  trajectory of synchronous gossip is provably schedule-independent — only
+  the *clock* feels the stragglers — which is exactly the paper's Fig. 5
+  argument.
+* :class:`AsyncPairwise` — AD-PSGD-style (Lian et al., 2018): no barrier;
+  each worker loops compute → apply update → average pairwise with one
+  random out-neighbor (atomically, when the message lands). Gradients are
+  taken at the parameters held when the computation *started* (the
+  protocol's characteristic staleness).
+* :class:`StaleGossip` — delayed gossip: worker j mixes whatever neighbor
+  snapshots have *arrived* by its clock (weights renormalized over the
+  available set), then broadcasts its new estimate.
+
+``executor=None`` runs any protocol in timing-only mode (no values — the
+legacy ``straggler.simulate`` fast path).
+
+Per-worker value ops touch single slices (``x[j]`` / ``x.at[j].set``) of the
+stacked state; the sync protocol additionally relies on the fact that slice
+j of the vmapped/einsum train step depends only on the slices with nonzero
+consensus weight, so feeding it a stack whose *irrelevant* rows are mid-round
+does not perturb worker j's bits.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.sim.trace import ARRIVAL, COMPUTE_DONE, FAIL, JOIN, SWITCH
+
+PyTree = Any
+
+
+class BatchCache:
+    """Random access over a sequential batch iterator, memoized by step.
+
+    Workers at different rounds (async protocols) draw batch(k) out of
+    order; the cache replays the iterator's deterministic sequence. Batches
+    are kept for the whole run — sized for simulation-scale problems.
+    """
+
+    def __init__(self, batches):
+        self._it = iter(batches)
+        self._cache: list[PyTree] = []
+
+    def get(self, k: int) -> PyTree:
+        while len(self._cache) <= k:
+            self._cache.append(next(self._it))
+        return self._cache[k]
+
+    def slice(self, k: int, j: int) -> PyTree:
+        import jax
+
+        return jax.tree.map(lambda x: x[j], self.get(k))
+
+
+class TrainExecutor:
+    """Stacked train state + the jitted per-slice value operations."""
+
+    def __init__(self, loss_fn: Callable, optimizer, params0: PyTree,
+                 batches, gossip):
+        import jax
+        import jax.numpy as jnp
+
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.gossip = gossip
+        self.M = gossip.topology.M
+        leaves = jax.tree.leaves(params0)
+        if not leaves or any(l.shape[:1] != (self.M,) for l in leaves):
+            raise ValueError(
+                "params0 must be stacked with leading worker dim M "
+                "(use repro.core.decentralized.replicate_for_workers)")
+        self.W: PyTree = jax.tree.map(jnp.asarray, params0)
+        self.opt: PyTree = optimizer.init(self.W)
+        self.batches = batches if isinstance(batches, BatchCache) else BatchCache(batches)
+
+        self._loss1 = jax.jit(loss_fn)
+        self._vg1 = jax.jit(jax.value_and_grad(loss_fn))
+        self._upd1 = jax.jit(lambda g, s, p, k: optimizer.update(g, s, p, k))
+        self._get = jax.jit(lambda T, j: jax.tree.map(lambda x: x[j], T))
+        self._set = jax.jit(
+            lambda T, j, v: jax.tree.map(lambda x, y: x.at[j].set(y), T, v))
+        self._commit = jax.jit(
+            lambda old, new, j: jax.tree.map(
+                lambda o, n: o.at[j].set(n[j]), old, new))
+        self._add = jax.jit(
+            lambda w, u: jax.tree.map(lambda a, b: a + b.astype(a.dtype), w, u))
+        self._mixcol = jax.jit(
+            lambda S, a: jax.tree.map(
+                lambda x: jnp.tensordot(a.astype(x.dtype), x, axes=([0], [0])),
+                S))
+        self._avg2 = jax.jit(
+            lambda T, i, j: jax.tree.map(
+                lambda x: x.at[i].set(x[i] / 2 + x[j] / 2)
+                           .at[j].set(x[i] / 2 + x[j] / 2), T))
+        self._step_fn = None
+        self._step_fn_topo = None
+
+    # -- slice ops --------------------------------------------------------
+
+    def get_slice(self, T: PyTree, j: int) -> PyTree:
+        return self._get(T, j)
+
+    def set_slice(self, T: PyTree, j: int, v: PyTree) -> PyTree:
+        return self._set(T, j, v)
+
+    def loss_and_grad(self, w: PyTree, batch: PyTree):
+        return self._vg1(w, batch)
+
+    def local_loss(self, w: PyTree, batch: PyTree) -> float:
+        return float(self._loss1(w, batch))
+
+    def update_slice(self, g: PyTree, opt_j: PyTree, w: PyTree, step: int):
+        import jax.numpy as jnp
+
+        return self._upd1(g, opt_j, w, jnp.asarray(step, jnp.int32))
+
+    def apply(self, w: PyTree, u: PyTree) -> PyTree:
+        return self._add(w, u)
+
+    def mix_column(self, S: PyTree, col: np.ndarray) -> PyTree:
+        return self._mixcol(S, np.asarray(col))
+
+    def pair_average(self, i: int, j: int) -> None:
+        self.W = self._avg2(self.W, i, j)
+
+    def mean_params(self, mask: np.ndarray | None = None) -> PyTree:
+        w = np.ones(self.M) if mask is None else mask.astype(np.float64)
+        return self._mixcol(self.W, w / w.sum())
+
+    # -- the real synchronous train step (sync protocol) ------------------
+
+    def step_fn(self, topology=None):
+        """The jitted ``make_train_step`` program — the same computation the
+        non-simulated ``train()`` loop runs (sans buffer donation)."""
+        import dataclasses
+
+        import jax
+
+        from repro.core.decentralized import make_train_step
+
+        spec = self.gossip
+        if topology is not None and topology is not spec.topology:
+            spec = dataclasses.replace(spec, topology=topology)
+        if self._step_fn is None or self._step_fn_topo is not spec.topology:
+            self._step_fn = jax.jit(
+                make_train_step(self.loss_fn, self.optimizer, gossip=spec,
+                                mode="gossip"))
+            self._step_fn_topo = spec.topology
+        return self._step_fn
+
+
+class Protocol:
+    """Engine-facing protocol interface; see module docstring."""
+
+    name = "protocol"
+    supports_churn = False
+
+    def __init__(self, executor: TrainExecutor | None = None, *,
+                 eval_fn: Callable[[PyTree], float] | None = None,
+                 eval_every: int = 0):
+        self.executor = executor
+        self.eval_fn = eval_fn if executor is not None else None
+        self.eval_every = eval_every
+        self.engine = None
+        self.stop_round: int | None = None
+        self.rounds: np.ndarray | None = None
+
+    def bind(self, engine, stop_round: int | None = None) -> None:
+        self.engine = engine
+        self.stop_round = stop_round
+        self.rounds = np.zeros(engine.M, dtype=int)
+
+    def start(self) -> None:
+        raise NotImplementedError
+
+    def handle(self, ev) -> dict | None:
+        raise NotImplementedError
+
+    def _past_stop(self, k: int) -> bool:
+        return self.stop_round is not None and k > self.stop_round
+
+
+# ---------------------------------------------------------------------------
+# Synchronous local-barrier gossip (the paper's DSM)
+# ---------------------------------------------------------------------------
+
+
+class SyncGossip(Protocol):
+    """w_j(k+1) = Σ_i A_ij w_i(k) − η g_j(w_j(k)); round k+1 starts at
+    max_{i∈N_j∪{j}} t_i(k) (+ link delay) — the paper's time recursion.
+
+    Each completion runs the full M-row ``make_train_step`` program and
+    commits one row — O(M²) row-gradients per round. That redundancy is the
+    price of the bit-match guarantee (the sim executes the *identical*
+    compiled step the train loop runs); it is deliberate and sized for
+    simulation-scale problems. Timing-only mode (``executor=None``) skips
+    all value work and runs at ~50k events/s."""
+
+    name = "sync"
+    supports_churn = False
+
+    def bind(self, engine, stop_round=None):
+        super().bind(engine, stop_round)
+        topo = engine.topology
+        self._in_nb = [set(map(int, topo.neighbors_in(j))) for j in range(engine.M)]
+        self._out_nb = [list(map(int, topo.neighbors_out(j))) for j in range(engine.M)]
+        self._arrived: dict[tuple[int, int], set[int]] = {}
+        self._started: set[tuple[int, int]] = set()
+        self._snaps: dict[tuple[int, int], PyTree] = {}
+        self._refs: dict[tuple[int, int], int] = {}
+        # per-round eval accumulation: round -> [count, time_sum, param_sum]
+        self._round_acc: dict[int, list] = {}
+
+    def start(self):
+        for j in range(self.engine.M):
+            self._broadcast(j, 0)
+        for j in range(self.engine.M):
+            self._maybe_start(j, 1)  # covers in-degree-0 nodes
+
+    def handle(self, ev):
+        if ev.kind == ARRIVAL:
+            self._arrived.setdefault((ev.worker, ev.round), set()).add(ev.src)
+            self._maybe_start(ev.worker, ev.round + 1)
+            return None
+        if ev.kind == COMPUTE_DONE:
+            return self._complete(ev.worker, ev.round)
+        return None
+
+    def _broadcast(self, j: int, k: int) -> None:
+        eng = self.engine
+        if self._past_stop(k + 1):
+            return  # nobody will consume round-k estimates past the stop
+        if self.executor is not None and self._out_nb[j]:
+            self._snaps[(j, k)] = self.executor.get_slice(self.executor.W, j)
+            self._refs[(j, k)] = len(self._out_nb[j])
+        for o in self._out_nb[j]:
+            eng.schedule(eng.clock + eng.link_delay(j, o), ARRIVAL, o,
+                         src=j, round=k)
+
+    def _maybe_start(self, j: int, k: int) -> None:
+        if self._past_stop(k) or self.rounds[j] != k - 1 or (j, k) in self._started:
+            return
+        if not self._in_nb[j] <= self._arrived.get((j, k - 1), set()):
+            return
+        eng = self.engine
+        eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
+                     round=k)
+        self._started.add((j, k))
+
+    def _complete(self, j: int, k: int) -> dict:
+        loss = self._commit(j, k) if self.executor is not None else None
+        self.rounds[j] = k
+        self._arrived.pop((j, k - 1), None)
+        self._broadcast(j, k)
+        self._maybe_start(j, k + 1)
+        return {"loss": loss}
+
+    def _commit(self, j: int, k: int) -> float:
+        """Run the real train step for round k and commit worker j's slice."""
+        import jax.numpy as jnp
+
+        from repro.core.decentralized import TrainState
+
+        ex = self.executor
+        # Assemble the round-(k-1) estimate stack as seen by worker j: its
+        # own current slice + the in-neighbor snapshots that arrived. Rows
+        # with zero consensus weight may be mid-round; they contribute ±0.0.
+        S = ex.W
+        for i in self._in_nb[j]:
+            S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+        state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
+        new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
+        ex.W = ex.set_slice(ex.W, j, ex.get_slice(new_state.params, j))
+        ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
+        for i in self._in_nb[j]:
+            self._refs[(i, k - 1)] -= 1
+            if self._refs[(i, k - 1)] == 0:
+                del self._refs[(i, k - 1)], self._snaps[(i, k - 1)]
+        loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
+        self._accumulate_eval(j, k)
+        return loss
+
+    def _accumulate_eval(self, j: int, k: int) -> None:
+        # eval_every: 0 disables, n evaluates every n-th round (all protocols)
+        if self.eval_fn is None or self.eval_every <= 0 or k % self.eval_every:
+            return
+        ex, eng = self.executor, self.engine
+        acc = self._round_acc.setdefault(k, [0, 0.0, None])
+        w_j = ex.get_slice(ex.W, j)
+        acc[0] += 1
+        acc[1] += eng.clock
+        acc[2] = w_j if acc[2] is None else ex.apply(acc[2], w_j)
+        if acc[0] == eng.M:
+            import jax
+
+            mean = jax.tree.map(lambda x: x / eng.M, acc[2])
+            eng.trace.record_eval(acc[1] / eng.M, k, float(self.eval_fn(mean)))
+            del self._round_acc[k]
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD-style asynchronous pairwise averaging
+# ---------------------------------------------------------------------------
+
+
+class AsyncPairwise(Protocol):
+    """No barrier: compute → apply local update → atomically average with one
+    random out-neighbor when the message lands; compute overlaps the
+    in-flight averaging (gradients are stale by one communication)."""
+
+    name = "async"
+    supports_churn = True
+
+    def bind(self, engine, stop_round=None):
+        super().bind(engine, stop_round)
+        self._pending: dict[int, PyTree | None] = {}
+        self._done_count = 0
+
+    def start(self):
+        for j in range(self.engine.M):
+            if self.engine.alive[j]:
+                self._begin(j)
+
+    def handle(self, ev):
+        if ev.kind == COMPUTE_DONE:
+            return self._complete(ev.worker, ev.round)
+        if ev.kind == ARRIVAL:
+            i, j = ev.src, ev.worker
+            if self.executor is not None and self.engine.alive[i] and \
+                    self.engine.alive[j]:
+                self.executor.pair_average(i, j)
+            return None
+        if ev.kind == JOIN:
+            self._begin(ev.worker)
+        elif ev.kind == FAIL:
+            self._pending.pop(ev.worker, None)
+        return None
+
+    def _begin(self, j: int) -> None:
+        k = int(self.rounds[j]) + 1
+        if self._past_stop(k):
+            return
+        if self.executor is not None:
+            self._pending[j] = self.executor.get_slice(self.executor.W, j)
+        eng = self.engine
+        eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
+                     round=k)
+
+    def _complete(self, j: int, k: int) -> dict:
+        eng, ex = self.engine, self.executor
+        loss = None
+        if ex is not None:
+            w_start = self._pending.pop(j)
+            l, g = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
+            u, opt_j = ex.update_slice(g, ex.get_slice(ex.opt, j), w_start, k - 1)
+            ex.W = ex.set_slice(ex.W, j, ex.apply(ex.get_slice(ex.W, j), u))
+            ex.opt = ex.set_slice(ex.opt, j, opt_j)
+            loss = float(l)
+        self.rounds[j] = k
+        nbrs = [o for o in map(int, eng.topology.neighbors_out(j)) if eng.alive[o]]
+        if nbrs:
+            partner = eng.choose(j, np.asarray(nbrs))
+            eng.schedule(eng.clock + eng.link_delay(j, partner), ARRIVAL,
+                         partner, src=j, round=k)
+        self._begin(j)
+        self._periodic_eval()
+        return {"loss": loss}
+
+    def _periodic_eval(self) -> None:
+        self._done_count += 1
+        if self.eval_fn is None or self.eval_every <= 0 or \
+                self._done_count % self.eval_every:
+            return
+        eng, ex = self.engine, self.executor
+        mean = ex.mean_params(np.asarray(eng.alive))
+        eng.trace.record_eval(eng.clock, self._done_count,
+                              float(self.eval_fn(mean)))
+
+
+# ---------------------------------------------------------------------------
+# Stale / delayed gossip
+# ---------------------------------------------------------------------------
+
+
+class StaleGossip(Protocol):
+    """Worker j mixes the *latest arrived* snapshot of each in-neighbor
+    (weights renormalized over whatever is available), applies its update,
+    broadcasts, and immediately starts the next round — no barrier."""
+
+    name = "stale"
+    supports_churn = True
+
+    def bind(self, engine, stop_round=None):
+        super().bind(engine, stop_round)
+        self._pending: dict[int, PyTree | None] = {}
+        self._buf: dict[tuple[int, int], tuple[int, PyTree]] = {}
+        self._done_count = 0
+
+    def start(self):
+        eng, ex = self.engine, self.executor
+        if ex is not None:
+            # everyone knows the (shared) round-0 initialization
+            for j in range(eng.M):
+                for i in map(int, eng.topology.neighbors_in(j)):
+                    self._buf[(j, i)] = (0, ex.get_slice(ex.W, i))
+        for j in range(eng.M):
+            if eng.alive[j]:
+                self._begin(j)
+
+    def handle(self, ev):
+        if ev.kind == COMPUTE_DONE:
+            return self._complete(ev.worker, ev.round)
+        if ev.kind == ARRIVAL:
+            key = (ev.worker, ev.src)
+            if self.engine.alive[ev.worker] and ev.payload is not None:
+                cur = self._buf.get(key)
+                if cur is None or ev.round > cur[0]:
+                    self._buf[key] = (ev.round, ev.payload)
+            return None
+        if ev.kind == JOIN:
+            self._begin(ev.worker)
+        elif ev.kind == FAIL:
+            self._pending.pop(ev.worker, None)
+        return None
+
+    def _begin(self, j: int) -> None:
+        k = int(self.rounds[j]) + 1
+        if self._past_stop(k):
+            return
+        if self.executor is not None:
+            self._pending[j] = self.executor.get_slice(self.executor.W, j)
+        eng = self.engine
+        eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
+                     round=k)
+
+    def _complete(self, j: int, k: int) -> dict:
+        eng, ex = self.engine, self.executor
+        loss = None
+        snapshot = None
+        if ex is not None:
+            w_start = self._pending.pop(j)
+            l, g = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
+            u, opt_j = ex.update_slice(g, ex.get_slice(ex.opt, j), w_start, k - 1)
+            # mix over {j} ∪ {arrived in-neighbors}, weights renormalized
+            col = np.array(eng.topology.A[:, j])
+            S = ex.W
+            for i in map(int, eng.topology.neighbors_in(j)):
+                got = self._buf.get((j, i))
+                if got is None:
+                    col[i] = 0.0
+                else:
+                    S = ex.set_slice(S, i, got[1])
+            mixed = ex.mix_column(S, col / col.sum())
+            snapshot = ex.apply(mixed, u)
+            ex.W = ex.set_slice(ex.W, j, snapshot)
+            ex.opt = ex.set_slice(ex.opt, j, opt_j)
+            loss = float(l)
+        self.rounds[j] = k
+        for o in map(int, eng.topology.neighbors_out(j)):
+            if eng.alive[o]:
+                eng.schedule(eng.clock + eng.link_delay(j, o), ARRIVAL, o,
+                             src=j, round=k, payload=snapshot)
+        self._begin(j)
+        self._periodic_eval()
+        return {"loss": loss}
+
+    def _periodic_eval(self) -> None:
+        self._done_count += 1
+        if self.eval_fn is None or self.eval_every <= 0 or \
+                self._done_count % self.eval_every:
+            return
+        eng, ex = self.engine, self.executor
+        mean = ex.mean_params(np.asarray(eng.alive))
+        eng.trace.record_eval(eng.clock, self._done_count,
+                              float(self.eval_fn(mean)))
+
+
+PROTOCOLS: dict[str, type[Protocol]] = {
+    "sync": SyncGossip,
+    "async": AsyncPairwise,
+    "stale": StaleGossip,
+}

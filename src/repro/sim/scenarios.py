@@ -1,0 +1,275 @@
+"""Composable scenario specs for the event-driven simulator.
+
+A :class:`Scenario` bundles everything *about the environment* (as opposed to
+the algorithm) that shapes a simulated run:
+
+* ``compute``    — per-worker computation-time model (straggler distribution,
+                   heterogeneous speeds, or a pre-tabulated time matrix);
+* ``link_delay`` — per-message communication delay model;
+* ``churn``      — node fail / join schedule;
+* ``switches``   — topology switches at given virtual times;
+* ``seed``       — master seed; the engine spawns one independent stream per
+                   worker (``np.random.SeedSequence.spawn``) so event
+                   interleaving never perturbs any worker's draw sequence.
+
+The computation-time *distributions* (the paper's §4 / Fig. 10 shapes) live
+here; ``repro.core.straggler`` re-exports them for backward compatibility.
+
+Callable conventions
+--------------------
+``TimeSampler(rng, shape) -> ndarray``          (unchanged legacy signature)
+``ComputeModel(rng, worker, round) -> float``   (per-event duration draw)
+``DelayModel(rng, src, dst) -> float``          (per-message delay draw)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+TimeSampler = Callable[[np.random.Generator, tuple[int, ...]], np.ndarray]
+ComputeModel = Callable[[np.random.Generator, int, int], float]
+DelayModel = Callable[[np.random.Generator, int, int], float]
+
+
+# ---------------------------------------------------------------------------
+# Computation-time distributions (paper §4, Fig. 10) — lifted from
+# repro.core.straggler, which re-exports them.
+# ---------------------------------------------------------------------------
+
+
+def deterministic(mean: float = 1.0) -> TimeSampler:
+    return lambda rng, shape: np.full(shape, mean)
+
+
+def uniform(low: float = 0.8, high: float = 1.2) -> TimeSampler:
+    return lambda rng, shape: rng.uniform(low, high, shape)
+
+
+def exponential(mean: float = 1.0) -> TimeSampler:
+    return lambda rng, shape: rng.exponential(mean, shape)
+
+
+def pareto(alpha: float = 2.5, xm: float = 0.6) -> TimeSampler:
+    """Pareto with shape alpha, scale xm (heavy tail for alpha ≤ ~2.5)."""
+    return lambda rng, shape: xm * (1.0 + rng.pareto(alpha, shape))
+
+
+def spark_like(base: float = 1.0, jitter: float = 0.05,
+               p_slow: float = 0.05, slow_factor: float = 4.0) -> TimeSampler:
+    """Empirical shape of the paper's Spark-cluster CDF (Fig. 10a): tight body
+    around the typical time + occasional multi-x slowdowns (GC, contention)."""
+
+    def sample(rng: np.random.Generator, shape):
+        t = base * rng.lognormal(0.0, jitter, shape)
+        slow = rng.random(shape) < p_slow
+        return np.where(slow, t * rng.uniform(2.0, slow_factor, shape), t)
+
+    return sample
+
+
+def asciq_like(base: float = 1.0) -> TimeSampler:
+    """ASCI-Q-style (Fig. 10b): OS noise — frequent small interruptions plus
+    rare long preemptions (heavier tail than spark_like)."""
+
+    def sample(rng: np.random.Generator, shape):
+        t = base * (1.0 + 0.02 * rng.standard_gamma(1.0, shape))
+        slow = rng.random(shape) < 0.01
+        return np.where(slow, t + base * rng.exponential(8.0, shape), t)
+
+    return sample
+
+
+DISTRIBUTIONS: dict[str, Callable[..., TimeSampler]] = {
+    "deterministic": deterministic,
+    "uniform": uniform,
+    "exponential": exponential,
+    "pareto": pareto,
+    "spark": spark_like,
+    "asciq": asciq_like,
+}
+
+
+# ---------------------------------------------------------------------------
+# Compute models (per-event duration draws)
+# ---------------------------------------------------------------------------
+
+
+def sampled(sampler: TimeSampler, speed: np.ndarray | None = None) -> ComputeModel:
+    """Draw each duration lazily from `sampler` on the worker's own stream.
+
+    speed: optional per-worker multiplicative factors (persistent
+      heterogeneity: speed[j] > 1 means worker j is systematically slower).
+    """
+
+    def duration(rng: np.random.Generator, worker: int, k: int) -> float:
+        t = float(np.asarray(sampler(rng, ())))
+        return t * float(speed[worker]) if speed is not None else t
+
+    duration.describe = {"kind": "sampled",
+                         "heterogeneous": speed is not None}
+    return duration
+
+
+def tabulated(T: np.ndarray) -> ComputeModel:
+    """Durations from a pre-drawn (M, K) matrix: T[j, k-1] is worker j's
+    round-k computation time. Reproduces the legacy straggler recursion's
+    draw order exactly (one upfront ``sampler(rng, (M, K))``)."""
+    T = np.asarray(T, dtype=np.float64)
+
+    def duration(rng: np.random.Generator, worker: int, k: int) -> float:
+        return float(T[worker, k - 1])
+
+    duration.describe = {"kind": "tabulated", "shape": list(T.shape)}
+    return duration
+
+
+# ---------------------------------------------------------------------------
+# Link-delay models
+# ---------------------------------------------------------------------------
+
+
+def no_delay() -> DelayModel:
+    d = lambda rng, src, dst: 0.0
+    d.describe = {"kind": "no_delay"}
+    return d
+
+
+def constant_delay(delay: float) -> DelayModel:
+    d = lambda rng, src, dst: float(delay)
+    d.describe = {"kind": "constant", "delay": delay}
+    return d
+
+
+def uniform_delay(low: float, high: float) -> DelayModel:
+    d = lambda rng, src, dst: float(rng.uniform(low, high))
+    d.describe = {"kind": "uniform", "low": low, "high": high}
+    return d
+
+
+def lognormal_delay(median: float, sigma: float = 0.5) -> DelayModel:
+    """WAN-ish delays: median `median`, log-std `sigma` (occasional spikes)."""
+    d = lambda rng, src, dst: float(median * rng.lognormal(0.0, sigma))
+    d.describe = {"kind": "lognormal", "median": median, "sigma": sigma}
+    return d
+
+
+def per_link_delay(D: np.ndarray) -> DelayModel:
+    """Deterministic per-link delays from a (M, M) matrix (e.g. rack/pod
+    hierarchies: cheap intra-group links, expensive cross-group)."""
+    D = np.asarray(D, dtype=np.float64)
+    d = lambda rng, src, dst: float(D[src, dst])
+    d.describe = {"kind": "per_link", "shape": list(D.shape)}
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec
+# ---------------------------------------------------------------------------
+
+
+ChurnEvent = tuple[float, int, str]          # (time, worker, 'fail' | 'join')
+TopologySwitch = tuple[float, Topology]      # (time, new_topology)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Environment spec for one simulated run (see module docstring)."""
+
+    name: str = "ideal"
+    compute: ComputeModel = dataclasses.field(
+        default_factory=lambda: sampled(deterministic(1.0)))
+    link_delay: DelayModel = dataclasses.field(default_factory=no_delay)
+    churn: tuple[ChurnEvent, ...] = ()
+    switches: tuple[TopologySwitch, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        for t, w, kind in self.churn:
+            if kind not in ("fail", "join"):
+                raise ValueError(f"churn kind must be fail|join, got {kind!r}")
+            if t < 0:
+                raise ValueError("churn times must be >= 0")
+
+    @property
+    def has_churn(self) -> bool:
+        return bool(self.churn)
+
+    @property
+    def has_switches(self) -> bool:
+        return bool(self.switches)
+
+    def describe(self) -> dict:
+        """JSON-able summary (the scenario 'schema' written into traces)."""
+        return {
+            "name": self.name,
+            "seed": self.seed,
+            "compute": getattr(self.compute, "describe", {"kind": "custom"}),
+            "link_delay": getattr(self.link_delay, "describe",
+                                  {"kind": "custom"}),
+            "churn": [[t, w, k] for t, w, k in self.churn],
+            "switches": [[t, topo.name] for t, topo in self.switches],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Named scenarios (the building blocks the examples / benches compose)
+# ---------------------------------------------------------------------------
+
+
+def ideal(seed: int = 0) -> Scenario:
+    """Deterministic unit compute times, zero delay — lockstep sanity world."""
+    return Scenario(name="ideal", seed=seed)
+
+
+def heavy_tail(dist: str = "spark", seed: int = 0, *,
+               delay: float = 0.0, **dist_kw) -> Scenario:
+    """The paper's Fig. 5 world: heavy-tail compute times, negligible
+    communication. dist ∈ DISTRIBUTIONS (default the Spark-trace shape)."""
+    return Scenario(
+        name=f"heavy_tail-{dist}",
+        compute=sampled(DISTRIBUTIONS[dist](**dist_kw)),
+        link_delay=constant_delay(delay) if delay else no_delay(),
+        seed=seed)
+
+
+def wan(dist: str = "uniform", median_delay: float = 0.3,
+        seed: int = 0) -> Scenario:
+    """Geo-distributed links: modest compute noise, lognormal link delays."""
+    return Scenario(
+        name="wan",
+        compute=sampled(DISTRIBUTIONS[dist]()),
+        link_delay=lognormal_delay(median_delay),
+        seed=seed)
+
+
+def flaky_workers(M: int, *, fail_times: dict[int, float],
+                  rejoin_after: float = 0.0, dist: str = "spark",
+                  seed: int = 0) -> Scenario:
+    """Node churn: worker j fails at fail_times[j]; rejoins rejoin_after
+    later (0 = never rejoins)."""
+    churn: list[ChurnEvent] = []
+    for w, t in sorted(fail_times.items()):
+        churn.append((t, w, "fail"))
+        if rejoin_after > 0:
+            churn.append((t + rejoin_after, w, "join"))
+    churn.sort(key=lambda e: e[0])
+    return Scenario(
+        name="flaky_workers",
+        compute=sampled(DISTRIBUTIONS[dist]()),
+        churn=tuple(churn),
+        seed=seed)
+
+
+def topology_schedule(switches: list[TopologySwitch], *, dist: str = "spark",
+                      seed: int = 0) -> Scenario:
+    """Switch the communication graph mid-run (e.g. densify as consensus
+    error grows); supported by the async / stale protocols."""
+    return Scenario(
+        name="topology_schedule",
+        compute=sampled(DISTRIBUTIONS[dist]()),
+        switches=tuple(sorted(switches, key=lambda s: s[0])),
+        seed=seed)

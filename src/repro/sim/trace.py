@@ -1,0 +1,156 @@
+"""Per-event traces and derived curves for the event-driven simulator.
+
+The engine records one :class:`TraceRecord` per processed event; this module
+turns the flat record list into the artifacts the paper's Fig. 5 needs:
+
+* ``completion_matrix`` — (M, K+1) per-worker round-completion times (the
+  quantity the legacy ``straggler.simulate`` recursion produced);
+* ``round_loss_curve``  — (times, losses): per-round mean train-batch loss
+  against mean completion *virtual* time;
+* ``eval_curve``        — (times, losses) of the global-loss evaluations the
+  protocol recorded (loss of the worker-mean parameters).
+
+Traces are JSON-serializable (``save``) so runs are diffable artifacts under
+``results/``, and hashable (``signature``) for determinism tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+# Event kinds (shared vocabulary between engine, protocols, and traces).
+COMPUTE_DONE = "compute_done"
+ARRIVAL = "arrival"
+FAIL = "fail"
+JOIN = "join"
+SWITCH = "switch"
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRecord:
+    seq: int            # global deterministic event sequence number
+    t: float            # virtual time the event fired
+    kind: str           # one of the kinds above
+    worker: int         # affected / destination worker
+    src: int = -1       # source worker (ARRIVAL only)
+    round: int = 0      # iteration index the event concerns
+    loss: float | None = None  # train-batch loss (COMPUTE_DONE w/ executor)
+
+    def as_tuple(self) -> tuple:
+        return (self.seq, self.t, self.kind, self.worker, self.src,
+                self.round, self.loss)
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalRecord:
+    t: float            # virtual time of the evaluation
+    round: int          # round index (sync) or completed-step count (async)
+    value: float        # eval_fn(mean params over alive workers)
+
+
+class Trace:
+    """Append-only event log plus protocol-recorded evaluation points."""
+
+    def __init__(self, M: int):
+        self.M = M
+        self.records: list[TraceRecord] = []
+        self.evals: list[EvalRecord] = []
+        self.meta: dict[str, Any] = {}
+
+    # -- recording --------------------------------------------------------
+
+    def record(self, rec: TraceRecord) -> None:
+        self.records.append(rec)
+
+    def record_eval(self, t: float, rnd: int, value: float) -> None:
+        self.evals.append(EvalRecord(t, rnd, value))
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    # -- derived curves ---------------------------------------------------
+
+    def dones(self) -> list[TraceRecord]:
+        return [r for r in self.records if r.kind == COMPUTE_DONE]
+
+    def completion_matrix(self, K: int | None = None) -> np.ndarray:
+        """(M, K+1) completion time of round k per worker; t[:, 0] = 0.
+        Missing (worker, round) cells — possible under churn or per-worker
+        round counts — are NaN."""
+        dones = self.dones()
+        if K is None:
+            K = max((r.round for r in dones), default=0)
+        t = np.full((self.M, K + 1), np.nan)
+        t[:, 0] = 0.0
+        for r in dones:
+            if 1 <= r.round <= K:
+                t[r.worker, r.round] = r.t
+        return t
+
+    def rounds_completed(self) -> np.ndarray:
+        """Per-worker highest completed round."""
+        out = np.zeros(self.M, dtype=int)
+        for r in self.dones():
+            out[r.worker] = max(out[r.worker], r.round)
+        return out
+
+    def round_loss_curve(self) -> tuple[np.ndarray, np.ndarray]:
+        """(times, losses): mean train-batch loss of round k vs mean
+        completion time of round k, over workers that completed round k."""
+        by_round: dict[int, list[tuple[float, float]]] = {}
+        for r in self.dones():
+            if r.loss is not None:
+                by_round.setdefault(r.round, []).append((r.t, r.loss))
+        ks = sorted(by_round)
+        times = np.array([np.mean([t for t, _ in by_round[k]]) for k in ks])
+        losses = np.array([np.mean([l for _, l in by_round[k]]) for k in ks])
+        return times, losses
+
+    def eval_curve(self) -> tuple[np.ndarray, np.ndarray]:
+        ts = np.array([e.t for e in self.evals])
+        vs = np.array([e.value for e in self.evals])
+        return ts, vs
+
+    # -- persistence / identity ------------------------------------------
+
+    def signature(self) -> tuple:
+        """Exact (float-preserving) fingerprint for determinism tests."""
+        return tuple(r.as_tuple() for r in self.records)
+
+    def to_json(self) -> dict:
+        return {
+            "M": self.M,
+            "meta": self.meta,
+            "events": [r.as_tuple() for r in self.records],
+            "evals": [[e.t, e.round, e.value] for e in self.evals],
+        }
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, default=float)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            d = json.load(f)
+        tr = cls(d["M"])
+        tr.meta = d.get("meta", {})
+        for seq, t, kind, worker, src, rnd, loss in d["events"]:
+            tr.record(TraceRecord(seq, t, kind, worker, src, rnd, loss))
+        for t, rnd, v in d.get("evals", []):
+            tr.record_eval(t, rnd, v)
+        return tr
+
+
+def time_to_target(times: np.ndarray, losses: np.ndarray,
+                   target: float) -> float:
+    """First virtual time at which the loss curve dips below `target`
+    (inf if never) — the paper's Fig. 5(c) reading."""
+    hit = np.nonzero(np.asarray(losses) <= target)[0]
+    return float(times[hit[0]]) if len(hit) else float("inf")

@@ -1,4 +1,4 @@
 from repro.train import checkpoint, loop
-from repro.train.loop import History, train
+from repro.train.loop import History, SimRun, run_simulated, train
 
-__all__ = ["checkpoint", "loop", "History", "train"]
+__all__ = ["checkpoint", "loop", "History", "train", "SimRun", "run_simulated"]

@@ -12,14 +12,22 @@ import numpy as np
 PyTree = Any
 
 
+# Suffix marking a bf16 leaf stored as its raw 16-bit pattern. numpy .npz
+# cannot store ml_dtypes, but a uint16 *view* keeps the exact bits at half
+# the size of the old widen-to-fp32 fallback.
+_BF16_TAG = "::bf16"
+
+
 def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         arr = np.asarray(leaf)
-        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
-            # numpy .npz cannot store ml_dtypes (bf16, fp8): widen to fp32;
-            # restore() casts back to the target leaf dtype.
+        if str(arr.dtype) == "bfloat16":
+            key, arr = key + _BF16_TAG, np.ascontiguousarray(arr).view(np.uint16)
+        elif arr.dtype.kind not in "fiub":
+            # remaining ml_dtypes (fp8 etc.): widen to fp32 (lossless — fp8
+            # values are exactly representable); restore() casts back.
             arr = arr.astype(np.float32)
         flat[key] = arr
     return flat
@@ -34,19 +42,33 @@ def save(path: str, tree: PyTree, step: int | None = None) -> None:
             json.dump({"step": int(step)}, f)
 
 
+def _base_key(stored: str) -> str:
+    return stored[:-len(_BF16_TAG)] if stored.endswith(_BF16_TAG) else stored
+
+
 def restore(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of `like` (shapes/dtypes preserved)."""
+    """Restore into the structure of `like` (shapes/dtypes preserved).
+
+    Storage-format agnostic: a leaf may be stored tagged (bf16 bit pattern)
+    or plain (fp32-widened legacy checkpoints), independent of the dtype of
+    `like` — only the *set of leaves* must match.
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path)
-    flat_like = _flatten_with_paths(like)
-    assert set(data.files) == set(flat_like), (
-        sorted(set(data.files) ^ set(flat_like))[:5])
+    stored_by_key = {_base_key(f): f for f in data.files}
+    like_keys = {_base_key(k) for k in _flatten_with_paths(like)}
+    assert set(stored_by_key) == like_keys, (
+        sorted(set(stored_by_key) ^ like_keys)[:5])
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path_k, leaf in leaves_paths:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
-        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        stored = stored_by_key[key]
+        raw = data[stored]
+        if stored.endswith(_BF16_TAG):
+            raw = raw.view(jnp.bfloat16.dtype)
+        arr = jnp.asarray(raw, dtype=leaf.dtype)
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -97,3 +97,83 @@ class _nullcontext:
 
     def __exit__(self, *a):
         return False
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulated training (repro.sim)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimRun:
+    """Result of a simulated run: final stacked state + the event trace."""
+
+    params: PyTree           # (M, ...) stacked parameters at the end
+    opt_state: PyTree
+    trace: Any               # repro.sim.trace.Trace
+    rounds: np.ndarray       # per-worker completed rounds
+    virtual_time: float      # final virtual clock
+
+    def loss_curve(self) -> tuple[np.ndarray, np.ndarray]:
+        """(virtual times, per-round mean train-batch loss)."""
+        return self.trace.round_loss_curve()
+
+    def eval_curve(self) -> tuple[np.ndarray, np.ndarray]:
+        """(virtual times, global loss of the worker-mean parameters)."""
+        return self.trace.eval_curve()
+
+
+def run_simulated(
+    loss_fn: Callable[[PyTree, PyTree], jax.Array],
+    params0: PyTree,
+    optimizer: Optimizer,
+    batches: Iterable[PyTree],
+    *,
+    gossip: GossipSpec,
+    protocol: str = "sync",
+    scenario=None,
+    rounds: int = 100,
+    eval_fn: Callable[[PyTree], float] | None = None,
+    eval_every: int = 1,
+    max_events: int | None = None,
+    max_time: float | None = None,
+    trace_path: str | None = None,
+) -> SimRun:
+    """Train under virtual wall-clocks on the discrete-event simulator.
+
+    Executes *real* train steps — the sync protocol runs the very
+    ``make_train_step`` program ``train()`` jits, so with deterministic
+    compute times its trajectory bit-matches the non-simulated loop — while
+    the engine advances per-worker clocks through the scenario's straggler
+    distribution, link delays, churn, and topology switches.
+
+    Args:
+      loss_fn / optimizer: as in :func:`train`.
+      params0: stacked parameters with leading worker dim M
+        (``replicate_for_workers``).
+      batches: per-step batch iterable, leaves shaped (M, B, ...) — same
+        contract as :func:`train`; replayed out-of-order via a cache for the
+        asynchronous protocols.
+      gossip: GossipSpec (topology + mixing backend; runs meshless).
+      protocol: 'sync' | 'async' | 'stale' (see ``repro.sim.protocols``).
+      scenario: ``repro.sim.Scenario`` (default: ideal unit-time world).
+      rounds: per-worker round budget (protocols stop scheduling past it).
+      eval_fn: optional (mean-params pytree) -> float global loss; recorded
+        per round (sync: every `eval_every` rounds when the whole round
+        completes; async/stale: every `eval_every` completed computations).
+      trace_path: if set, write the JSON event trace there.
+    """
+    from repro import sim
+
+    proto_cls = sim.PROTOCOLS.get(protocol)
+    if proto_cls is None:
+        raise ValueError(f"unknown protocol {protocol!r}; "
+                         f"choose from {sorted(sim.PROTOCOLS)}")
+    executor = sim.TrainExecutor(loss_fn, optimizer, params0, batches, gossip)
+    proto = proto_cls(executor=executor, eval_fn=eval_fn, eval_every=eval_every)
+    eng = sim.Engine(gossip.topology, scenario)
+    eng.run(proto, until_round=rounds, max_events=max_events, max_time=max_time)
+    if trace_path:
+        eng.trace.save(trace_path)
+    return SimRun(params=executor.W, opt_state=executor.opt, trace=eng.trace,
+                  rounds=proto.rounds.copy(), virtual_time=eng.clock)

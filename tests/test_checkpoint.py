@@ -1,0 +1,86 @@
+"""Checkpoint round-trip tests, incl. the lossless bf16 uint16-view path."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as C
+
+
+def _bits(x):
+    return np.asarray(x).view(np.uint8)
+
+
+def test_bf16_roundtrip_lossless(tmp_path):
+    """Regression: bf16 leaves used to be widened to fp32 (2x size); they now
+    round-trip bit-exactly via a uint16 view."""
+    rng = np.random.default_rng(0)
+    # include values fp32-rounding would perturb: subnormals, big magnitudes
+    vals = np.concatenate([rng.normal(size=500), [1e-40, -3e38, 0.0, -0.0]])
+    tree = {"w": jnp.asarray(vals, jnp.bfloat16).reshape(24, 21),
+            "scale": jnp.asarray([2.5], jnp.bfloat16)}
+    path = os.path.join(tmp_path, "ck.npz")
+    C.save(path, tree, step=7)
+    back = C.restore(path, tree)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        assert np.array_equal(_bits(tree[k]), _bits(back[k])), k
+    assert C.latest_step(path) == 7
+
+
+def test_bf16_checkpoint_is_half_the_fp32_size(tmp_path):
+    x = jnp.zeros((64, 64))
+    big = os.path.join(tmp_path, "fp32.npz")
+    small = os.path.join(tmp_path, "bf16.npz")
+    C.save(big, {"w": x})
+    C.save(small, {"w": x.astype(jnp.bfloat16)})
+    # npz stores raw (uncompressed) arrays: bf16 payload is half of fp32's
+    assert os.path.getsize(small) < 0.6 * os.path.getsize(big)
+
+
+def test_mixed_dtype_tree_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    tree = {
+        "emb": jnp.asarray(rng.normal(size=(16, 8)), jnp.bfloat16),
+        "head": {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                 "steps": jnp.arange(6, dtype=jnp.int32)},
+        "mask": jnp.asarray([True, False, True]),
+    }
+    path = os.path.join(tmp_path, "mixed.npz")
+    C.save(path, tree)
+    back = C.restore(path, tree)
+    import jax
+
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(back)[0]):
+        assert pa == pb
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(_bits(a), _bits(b)), pa
+
+
+def test_cross_dtype_restore(tmp_path):
+    """A checkpoint stores leaves by *base* key regardless of dtype tag:
+    bf16-saved restores into an fp32 `like` (master weights) and a plain
+    fp32 save (the legacy widened format) restores into a bf16 `like`."""
+    rng = np.random.default_rng(2)
+    vals = rng.normal(size=(8, 3))
+    bf16_path = os.path.join(tmp_path, "bf16.npz")
+    C.save(bf16_path, {"w": jnp.asarray(vals, jnp.bfloat16)})
+    up = C.restore(bf16_path, {"w": jnp.zeros((8, 3), jnp.float32)})
+    assert up["w"].dtype == jnp.float32
+    assert np.array_equal(np.asarray(up["w"]),
+                          np.asarray(jnp.asarray(vals, jnp.bfloat16),
+                                     dtype=np.float32))
+    fp32_path = os.path.join(tmp_path, "fp32.npz")
+    C.save(fp32_path, {"w": jnp.asarray(vals, jnp.float32)})
+    down = C.restore(fp32_path, {"w": jnp.zeros((8, 3), jnp.bfloat16)})
+    assert down["w"].dtype == jnp.bfloat16
+
+
+def test_restore_rejects_mismatched_structure(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    C.save(path, {"a": jnp.zeros(3)})
+    with pytest.raises(AssertionError):
+        C.restore(path, {"b": jnp.zeros(3)})
