@@ -22,6 +22,7 @@ BENCHES = [
     ("appC", "benchmarks.bench_appc"),
     ("kernels", "benchmarks.bench_kernels"),
     ("bus", "benchmarks.bench_bus"),
+    ("groups", "benchmarks.bench_groups"),
     ("sim", "benchmarks.bench_sim"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

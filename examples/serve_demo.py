@@ -1,9 +1,14 @@
 """Batched serving demo: prefill + KV-cache decode with the wave batcher.
 
     PYTHONPATH=src python examples/serve_demo.py [--arch gemma-2b]
+    PYTHONPATH=src python examples/serve_demo.py \
+        --gossip-ckpt results/train_100m.npz --preset small
 
 Uses the reduced config of any assigned architecture; exercises the same
-serve_step the decode dry-run shapes lower.
+serve_step the decode dry-run shapes lower. With ``--gossip-ckpt`` the
+demo decodes from a decentralized-training checkpoint: the worker-stacked
+estimates are consensus-averaged (w̄ = (1/M)Σ w_j) into one serving replica
+via ``serving.engine.load_consensus_params``.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -16,16 +21,31 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import model as M
 from repro.serving import WaveBatcher, generate
+from repro.serving.engine import load_consensus_params
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=ARCH_NAMES)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--gossip-ckpt", default=None,
+                    help="decode from a gossip-trained checkpoint "
+                         "(train_100m.py output); implies --preset's config")
+    ap.add_argument("--preset", default="small",
+                    help="train_100m preset the checkpoint was trained with")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=True)
-    params = M.init(jax.random.PRNGKey(0), cfg)
+    if args.gossip_ckpt:
+        from train_100m import PRESETS, make_config  # same examples/ dir
+        if args.preset not in PRESETS:
+            ap.error(f"--preset must be one of {sorted(PRESETS)}")
+        cfg, _ = make_config(args.preset)
+        params = load_consensus_params(args.gossip_ckpt, cfg)
+        print(f"serving consensus average of gossip checkpoint "
+              f"{args.gossip_ckpt} ({cfg.name})")
+    else:
+        cfg = get_config(args.arch, reduced=True)
+        params = M.init(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     print(f"serving {cfg.name}: d_model={cfg.d_model} layers={cfg.n_layers}")
 

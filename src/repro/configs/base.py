@@ -74,7 +74,15 @@ class ModelConfig:
     frontend: str | None = None       # 'audio' -> input_specs gives frame embeddings
 
     # --- distribution defaults ----------------------------------------------------
-    dp_mode: str = "gossip"           # gossip | allreduce | fsdp (nemotron)
+    dp_mode: str = "gossip"           # gossip | allreduce (training; replicas
+                                      # that exceed one device group shard
+                                      # over the WorkerMesh model axis INSIDE
+                                      # gossip mode — the old 'fsdp'
+                                      # technique-off fallback is retired)
+    serve_sharding: str = "tp"        # tp | fsdp — prefill/decode param
+                                      # layout; 'fsdp' spreads one replica's
+                                      # d_model over the worker axes too
+                                      # (nemotron-scale checkpoints)
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
     remat: bool = True

@@ -1,8 +1,13 @@
 """nemotron-4-340b [dense] — GQA, squared-ReLU MLP. [arXiv:2402.16819]
 
-A 340B replica (params + momentum) cannot fit on one 16-chip model-parallel
-group, so per-worker replicas (the paper's technique) are infeasible at this
-mesh; trained in `fsdp` mode (DESIGN.md §Arch-applicability).
+A 340B replica (params + momentum) cannot fit one 16-chip model-parallel
+group *unsharded* — which used to force the `fsdp` fallback (technique off).
+With worker-group meshes the replica is tensor/FSDP-sharded over the
+WorkerMesh model axis inside gossip mode, so the paper's technique runs at
+this scale: 32 workers × 16-way model sharding on the multi-pod mesh, bulk
+gossip collectives moving 1/16 of the replica per device (EXPERIMENTS.md
+§Scale). Serving still spreads one consensus replica over the whole mesh
+(`serve_sharding='fsdp'`).
 """
 from repro.configs.base import ModelConfig
 
@@ -18,7 +23,8 @@ CONFIG = ModelConfig(
     vocab_size=256000,
     mlp_type="relu2",
     source="arXiv:2402.16819",
-    dp_mode="fsdp",
+    dp_mode="gossip",
+    serve_sharding="fsdp",
     param_dtype="bfloat16",
     compute_dtype="bfloat16",
 )

@@ -205,9 +205,9 @@ def _chunk_starts(rows: int, block_r: int, nchunks: int) -> list[tuple[int, int]
     return out
 
 
-def _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights, eta, perms,
-                         nchunks, interpret, donate, groups):
-    """Distributed path: bulk ppermute per permutation inside shard_map.
+def _mix_group_chunked(x2, u2, rows, block_r, cols, weights, eta, pairs, axes,
+                       nchunks, interpret, donate):
+    """Mix one (rows, cols) buffer: pipelined bulk ppermutes + fused kernel.
 
     With ``nchunks > 1`` the buffer is software-pipelined: the permutes for
     chunk c+1 are issued *before* the fused kernel for chunk c, so async
@@ -215,9 +215,44 @@ def _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights, eta, perms,
     chunk's VMEM pass — the classic double-buffered pattern, two chunks of
     neighbor data live at a time.
     """
+    chunks = _chunk_starts(rows, min(block_r, rows), nchunks)
+
+    def permute(c):
+        start, size = chunks[c]
+        x_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
+        return jnp.stack([jax.lax.ppermute(x_c, axes, pr) for pr in pairs])
+
+    nbrs = permute(0)
+    pieces = []
+    for c, (start, size) in enumerate(chunks):
+        nxt = permute(c + 1) if c + 1 < len(chunks) else None
+        w_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
+        u_c = None if u2 is None else jax.lax.slice_in_dim(
+            u2, start, start + size, axis=0)
+        pieces.append(gossip_mix_2d(
+            w_c, nbrs, weights, u_c, eta,
+            block_r=min(block_r, size), block_c=cols,
+            interpret=interpret, donate=donate))
+        nbrs = nxt
+    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+
+def _perm_pairs(spec, perms):
     M = spec.topology.M
+    return [[(int(perm[j]), j) for j in range(M)] for _, perm in perms]
+
+
+def _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights, eta, perms,
+                         nchunks, interpret, donate, groups):
+    """Distributed path: bulk ppermute per permutation inside shard_map.
+
+    The worker dim of every (M, R, C) buffer is manual over the worker axes;
+    each worker's whole replica buffer lives (replicated) on its model group.
+    For model-sharded replicas use :func:`_mix_pytree_model_sharded` instead —
+    it never materializes the full replica on one device.
+    """
     axes = spec.worker_axes if len(spec.worker_axes) > 1 else spec.worker_axes[0]
-    pairs = [[(int(perm[j]), j) for j in range(M)] for _, perm in perms]
+    pairs = _perm_pairs(spec, perms)
 
     in_specs = tuple(P(spec.worker_axes) for _ in bufs)
     if upd_bufs is not None:
@@ -230,27 +265,9 @@ def _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights, eta, perms,
         for x, u, g in zip(xs, us, groups):
             x2 = x[0]                        # per-shard worker dim is 1
             u2 = None if u is None else u[0]
-            chunks = _chunk_starts(g.rows, min(g.block_r, g.rows), nchunks)
-
-            def permute(c):
-                start, size = chunks[c]
-                x_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
-                return jnp.stack([jax.lax.ppermute(x_c, axes, pr)
-                                  for pr in pairs])
-
-            nbrs = permute(0)
-            pieces = []
-            for c, (start, size) in enumerate(chunks):
-                nxt = permute(c + 1) if c + 1 < len(chunks) else None
-                w_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
-                u_c = None if u2 is None else jax.lax.slice_in_dim(
-                    u2, start, start + size, axis=0)
-                pieces.append(gossip_mix_2d(
-                    w_c, nbrs, weights, u_c, eta,
-                    block_r=min(g.block_r, size), block_c=g.cols,
-                    interpret=interpret, donate=donate))
-                nbrs = nxt
-            out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+            out = _mix_group_chunked(x2, u2, g.rows, g.block_r, g.cols,
+                                     weights, eta, pairs, axes, nchunks,
+                                     interpret, donate)
             outs.append(out[None])
         return tuple(outs)
 
@@ -260,6 +277,53 @@ def _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights, eta, perms,
         axis_names=set(spec.worker_axes),
     )(*(tuple(bufs) + tuple(upd_bufs or ())))
     return list(out)
+
+
+def _mix_pytree_model_sharded(params, updates, spec, mesh, param_specs,
+                              weights, eta, perms, nchunks, interpret, donate,
+                              block_r, block_c):
+    """Worker-group path: gossip composed with model-parallel replicas.
+
+    ``param_specs`` carries each leaf's full PartitionSpec (leading worker
+    entry + any 'model' sharding of heads/ff/vocab). The shard_map makes the
+    worker axes AND the model axis manual, so every device sees only its
+    local 1/k model shard of each leaf. The body packs *those local shards*
+    into the flat (R_loc, C) bus buffers — a per-model-shard bus — and runs
+    the bulk Birkhoff ppermutes over the worker axes only: the model axis
+    stays sharded end to end, so per-device collective bytes drop by the
+    model-parallel factor k (and so does the fused kernel's VMEM traffic).
+    Worker j's shard exchanges with the *same-coordinate* shard of its
+    neighbors, which is exactly elementwise consensus on the full replica.
+    """
+    axes = spec.worker_axes if len(spec.worker_axes) > 1 else spec.worker_axes[0]
+    pairs = _perm_pairs(spec, perms)
+    manual = set(spec.worker_axes)
+    if spec.model_axis:
+        manual = manual | {spec.model_axis}
+
+    def f(p, u):
+        local = jax.tree.map(lambda x: x[0], p)      # strip worker dim (=1)
+        u_loc = None if u is None else jax.tree.map(lambda x: x[0], u)
+        layout = plan_layout(local, lead_ndim=0, block_r=block_r,
+                             block_c=block_c)
+        bufs = pack(local, layout, lead_ndim=0)
+        upd_bufs = None if u_loc is None else pack(u_loc, layout, lead_ndim=0)
+        outs = []
+        for gi, g in enumerate(layout.groups):
+            u2 = None if upd_bufs is None else upd_bufs[gi]
+            outs.append(_mix_group_chunked(
+                bufs[gi], u2, g.rows, g.block_r, g.cols, weights, eta, pairs,
+                axes, nchunks, interpret, donate))
+        mixed = unpack(outs, layout, lead_ndim=0)
+        return jax.tree.map(lambda x: x[None], mixed)
+
+    if updates is None:
+        return compat.shard_map(
+            lambda p: f(p, None), mesh=mesh, in_specs=(param_specs,),
+            out_specs=param_specs, axis_names=manual)(params)
+    return compat.shard_map(
+        f, mesh=mesh, in_specs=(param_specs, param_specs),
+        out_specs=param_specs, axis_names=manual)(params, updates)
 
 
 def _mix_buffers_local(bufs, upd_bufs, weights, eta, perms, nchunks,
@@ -298,7 +362,8 @@ def _mix_buffers_local(bufs, upd_bufs, weights, eta, perms, nchunks,
 def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
             eta: float | jax.Array = 1.0, nchunks: int = 1,
             interpret: bool | None = None, block_r: int = DEFAULT_BLOCK_R,
-            block_c: int = DEFAULT_BLOCK_C) -> PyTree:
+            block_c: int = DEFAULT_BLOCK_C,
+            param_specs: PyTree | None = None) -> PyTree:
     """Consensus (+ optional fused update) over the flat parameter bus.
 
     Computes ``P_j ← Σ_i A[i,j]·P_i − eta·U_j`` for every worker j in one
@@ -313,6 +378,12 @@ def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
     collectives). Without a mesh, a numerically-identical gather emulation
     runs single-process.
 
+    ``param_specs`` (the per-leaf PartitionSpecs, leading worker entry plus
+    any model-axis sharding — ``shardings.param_pspecs`` output) switches the
+    sharded path to the per-model-shard bus: each device packs only its local
+    1/k of the replica and the bulk ppermutes move 1/k the bytes. Required
+    whenever the replicas are tensor/FSDP-sharded over ``spec.model_axis``.
+
     ``interpret=None`` (default) auto-selects: the compiled Pallas kernel on
     TPU, interpret (Python-emulation, correctness-only) mode elsewhere.
     """
@@ -320,21 +391,29 @@ def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
         interpret = jax.default_backend() != "tpu"
     a0, others = _split_perms(spec)
     weights = jnp.asarray([a0] + [w for w, _ in others], jnp.float32)
+    eta_arr = jnp.asarray([eta], jnp.float32) if updates is not None else None
+
+    if not others:  # degenerate (M == 1): no communication at all
+        if updates is None:
+            return params
+        return jax.tree.map(
+            lambda b, u: (b * weights[0] - eta_arr[0] * u).astype(b.dtype),
+            params, updates)
+
+    if mesh is None:
+        mesh = compat.get_current_mesh()
+    if mesh is not None and param_specs is not None:
+        return _mix_pytree_model_sharded(params, updates, spec, mesh,
+                                         param_specs, weights, eta_arr,
+                                         others, nchunks, interpret,
+                                         donate=not interpret,
+                                         block_r=block_r, block_c=block_c)
+
     layout = plan_layout(params, lead_ndim=1, block_r=block_r, block_c=block_c)
     bufs = pack(params, layout)
     upd_bufs = None
     if updates is not None:
         upd_bufs = pack(updates, layout)
-    eta_arr = jnp.asarray([eta], jnp.float32) if updates is not None else None
-
-    if not others:  # degenerate (M == 1): no communication at all
-        mixed = bufs if updates is None else [
-            (b * weights[0] - eta_arr[0] * u).astype(b.dtype)
-            for b, u in zip(bufs, upd_bufs)]
-        return unpack(mixed, layout)
-
-    if mesh is None:
-        mesh = compat.get_current_mesh()
     if mesh is not None:
         mixed = _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights,
                                      eta_arr, others, nchunks, interpret,
@@ -354,7 +433,8 @@ def mix_and_update_time_varying(params: PyTree, spec, updates: PyTree,
 
     ``lax.switch`` over the log2(M) one-peer rounds; every branch is the
     fused bus pass for that round's pairwise permutation topology (a single
-    bulk collective — degree 1)."""
+    bulk collective — degree 1). ``kw`` (incl. ``param_specs``) forwards to
+    :func:`mix_bus`."""
     import dataclasses as _dc
 
     from repro.core.topology import one_peer_exponential

@@ -13,9 +13,14 @@ Implementation notes
 * allreduce mode: the centralized baseline the paper compares against
   (parameter server / ring all-reduce ≡ clique topology, A = 11ᵀ/M):
   params are replicated over the worker axes, XLA inserts the all-reduce.
-* fsdp mode: beyond-paper fallback for archs whose replica cannot fit on one
-  model-parallel group (nemotron-4-340b): params sharded over data×model,
-  standard data parallelism, technique off (recorded in DESIGN.md).
+
+Replicas that don't fit one device are handled *inside* gossip mode, not by
+a separate mode: the WorkerMesh (launch/mesh.py) factors the device mesh
+into worker axes × a model axis, ``param_specs`` carries each leaf's
+tensor/FSDP sharding over 'model', and the gossip backends mix per model
+shard (per-device collective bytes ∝ 1/k). The old ``fsdp`` fallback mode —
+which turned the paper's technique OFF for nemotron-scale archs — is
+retired; requesting it raises with a pointer here.
 """
 from __future__ import annotations
 
@@ -44,6 +49,13 @@ class StepMetrics(NamedTuple):
     grad_spread: jax.Array     # Ê_sp = Σ_j ||g_j - ḡ||²      (paper E_sp)
     mean_grad_norm: jax.Array  # √M·||ḡ||₂ — single-sample proxy for H
     param_spread: jax.Array    # ||ΔW||_F² = Σ_j ||w_j - w̄||² (consensus error)
+
+
+def _raw_mesh(mesh):
+    """Accept a WorkerMesh (launch/mesh.py) or a raw jax mesh everywhere."""
+    from repro.launch.mesh import WorkerMesh  # local: keep core → launch lazy
+
+    return WorkerMesh.raw(mesh)
 
 
 def init_state(params: PyTree, optimizer: Optimizer) -> TrainState:
@@ -117,6 +129,7 @@ def make_train_step(
     compute_stats: bool = True,
     mix_first: bool = True,
     microbatch: int = 1,
+    param_specs: Any = None,
 ):
     """Build the jit-able train step.
 
@@ -124,12 +137,17 @@ def make_train_step(
       loss_fn: (params, batch) -> scalar loss for ONE worker (no leading M).
       optimizer: repro.optim Optimizer.
       gossip: GossipSpec (required for mode='gossip').
-      mode: 'gossip' | 'allreduce' | 'fsdp'.
+      mode: 'gossip' | 'allreduce'.
       mix_first: paper's eq. (3) mixes the *current* params and subtracts the
         gradient taken at the current local params (True). False gives the
         'adapt-then-combine' DSGD variant (Lian et al. 2017) — mix(w - η g).
       microbatch: gradient-accumulation factor over the per-worker batch.
+      param_specs: per-leaf PartitionSpecs of the (worker-stacked) params —
+        ``shardings.param_pspecs`` output. Lets the gossip backends mix
+        model-sharded replicas shard-locally (WorkerMesh composition);
+        without it each worker's replica must fit one device group.
     """
+    mesh = _raw_mesh(mesh)
 
     if mode == "gossip":
         if gossip is None:
@@ -155,8 +173,9 @@ def make_train_step(
             def do_mix(p):
                 if gossip.time_varying:
                     return gossip_lib.mix_pytree_time_varying(
-                        p, gossip, state.step, mesh)
-                return gossip_lib.mix_pytree(p, gossip, mesh)
+                        p, gossip, state.step, mesh, param_specs=param_specs)
+                return gossip_lib.mix_pytree(p, gossip, mesh,
+                                             param_specs=param_specs)
 
             def apply_update(p):
                 return jax.tree.map(lambda m, u: m + u.astype(m.dtype), p, updates)
@@ -168,9 +187,10 @@ def make_train_step(
                     # updates already carry −lr ⇒ eta = −1 gives mix(p) + u
                     if gossip.time_varying:
                         return bus.mix_and_update_time_varying(
-                            p, gossip, updates, state.step, mesh, eta=-1.0)
+                            p, gossip, updates, state.step, mesh, eta=-1.0,
+                            param_specs=param_specs)
                     return bus.mix_bus(p, gossip, mesh, updates=updates,
-                                       eta=-1.0)
+                                       eta=-1.0, param_specs=param_specs)
 
                 if gossip.period > 1:
                     new_params = jax.lax.cond(
@@ -188,7 +208,8 @@ def make_train_step(
                 new_params = apply_update(mixed)
             else:
                 stepped = apply_update(state.params)
-                new_params = gossip_lib.mix_pytree(stepped, gossip, mesh) \
+                new_params = gossip_lib.mix_pytree(
+                    stepped, gossip, mesh, param_specs=param_specs) \
                     if gossip.period == 1 else jax.lax.cond(
                         state.step % gossip.period == 0, do_mix, lambda p: p, stepped)
 
@@ -202,7 +223,13 @@ def make_train_step(
 
         return step
 
-    if mode in ("allreduce", "fsdp"):
+    if mode == "fsdp":
+        raise ValueError(
+            "the 'fsdp' train mode is retired: shard the replica over the "
+            "WorkerMesh model axis instead (mode='gossip' with param_specs "
+            "from shardings.param_pspecs — see launch/mesh.WorkerMesh)")
+
+    if mode == "allreduce":
         # Centralized equivalent: single param copy; batch (B, ...) sharded
         # over the worker axes; XLA all-reduces the gradient.
         def step(state: TrainState, batch: PyTree) -> tuple[TrainState, StepMetrics]:

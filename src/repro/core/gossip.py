@@ -57,6 +57,10 @@ class GossipSpec:
       backend: 'einsum' | 'ppermute' | 'allreduce' | 'fused' | 'auto'.
       worker_axes: mesh axis name(s) the worker dimension is sharded over,
         e.g. ('data',) or ('pod', 'data') for multi-pod.
+      model_axis: intra-replica sharding axis (WorkerMesh.model_axis) or
+        None. When set, the fused bus gossips *per model shard*: each device
+        packs only its local 1/k of the replica and the bulk ppermutes move
+        1/k the bytes — gossip composes with tensor/FSDP-sharded replicas.
       period: gossip every `period` optimizer steps (1 = paper's synchronous
         DSM; >1 = local-SGD-style beyond-paper variant).
       time_varying: None (static topology) or 'one_peer_exp' — beyond-paper:
@@ -69,8 +73,20 @@ class GossipSpec:
     topology: Topology
     backend: str = "auto"
     worker_axes: tuple[str, ...] = ("data",)
+    model_axis: str | None = None
     period: int = 1
     time_varying: str | None = None
+
+    @classmethod
+    def for_mesh(cls, topology: Topology, wmesh, **kw) -> "GossipSpec":
+        """Spec bound to a WorkerMesh: worker axes + model axis follow the
+        mesh factorization (model_axis only when the shard factor k > 1)."""
+        from repro.launch.mesh import WorkerMesh
+
+        wm = WorkerMesh.ensure(wmesh)
+        return cls(topology=topology, worker_axes=wm.worker_axes,
+                   model_axis=wm.model_axis if wm.model_factor > 1 else None,
+                   **kw)
 
     def resolved_backend(self) -> str:
         if self.backend != "auto":
@@ -132,9 +148,22 @@ def _ppermute_leaf(x: jax.Array, spec: GossipSpec) -> jax.Array:
     return acc
 
 
-def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn) -> PyTree:
-    """Run leaf_fn per worker shard with the worker axes manual, rest auto."""
-    specs = jax.tree.map(lambda _: P(spec.worker_axes), params)
+def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn,
+                   param_specs: PyTree | None = None) -> PyTree:
+    """Run leaf_fn per worker shard with the worker axes manual, rest auto.
+
+    ``param_specs`` (per-leaf PartitionSpecs incl. the leading worker entry
+    and any model-axis sharding) keeps tensor-sharded replicas *sharded*
+    inside the body: each device mixes only its local model shard — without
+    it every leaf would be gathered to P(worker_axes) (full replica per
+    device) first.
+    """
+    specs = param_specs
+    manual = set(spec.worker_axes)
+    if specs is None:
+        specs = jax.tree.map(lambda _: P(spec.worker_axes), params)
+    elif spec.model_axis:
+        manual = manual | {spec.model_axis}
 
     def f(p):
         return jax.tree.map(leaf_fn, p)
@@ -144,11 +173,12 @@ def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn) -> PyTree:
         mesh=mesh,
         in_specs=(specs,),
         out_specs=specs,
-        axis_names=set(spec.worker_axes),
+        axis_names=manual,
     )(params)
 
 
-def mix_pytree(params: PyTree, spec: GossipSpec, mesh=None) -> PyTree:
+def mix_pytree(params: PyTree, spec: GossipSpec, mesh=None, *,
+               param_specs: PyTree | None = None) -> PyTree:
     """Consensus step over the parameter pytree (leaves have leading M dim)."""
     backend = spec.resolved_backend()
     if backend not in ("einsum", "fused", "allreduce", "ppermute"):
@@ -160,17 +190,18 @@ def mix_pytree(params: PyTree, spec: GossipSpec, mesh=None) -> PyTree:
 
         # mesh=None falls back to the bus's single-process gather emulation
         # (numerically identical to the sharded path, same fused kernel).
-        return bus.mix_bus(params, spec, mesh)
+        return bus.mix_bus(params, spec, mesh, param_specs=param_specs)
     if mesh is None:
         mesh = compat.get_current_mesh()
         if mesh is None:  # pragma: no cover - interactive use
             return _einsum_mix(params, spec)
     if backend == "allreduce":
         return _shard_map_mix(
-            params, spec, mesh, lambda x: _allreduce_leaf(x, spec.worker_axes)
-        )
+            params, spec, mesh, lambda x: _allreduce_leaf(x, spec.worker_axes),
+            param_specs)
     if backend == "ppermute":
-        return _shard_map_mix(params, spec, mesh, lambda x: _ppermute_leaf(x, spec))
+        return _shard_map_mix(params, spec, mesh,
+                              lambda x: _ppermute_leaf(x, spec), param_specs)
     raise ValueError(f"unknown gossip backend {backend!r}")
 
 
@@ -184,7 +215,8 @@ def make_mixer(spec: GossipSpec, mesh=None):
 
 
 def mix_pytree_time_varying(params: PyTree, spec: GossipSpec, step: jax.Array,
-                            mesh=None) -> PyTree:
+                            mesh=None, *,
+                            param_specs: PyTree | None = None) -> PyTree:
     """Step-dependent consensus (spec.time_varying = 'one_peer_exp').
 
     lax.switch over the log2(M) one-peer-exponential rounds; each branch is
@@ -199,7 +231,8 @@ def mix_pytree_time_varying(params: PyTree, spec: GossipSpec, step: jax.Array,
     for k in range(tau):
         sub = dataclasses.replace(
             spec, topology=one_peer_exponential(M, k), time_varying=None)
-        branches.append(lambda p, s=sub: mix_pytree(p, s, mesh))
+        branches.append(lambda p, s=sub: mix_pytree(p, s, mesh,
+                                                    param_specs=param_specs))
     return jax.lax.switch(step % tau, branches, params)
 
 

@@ -35,7 +35,7 @@ from repro.core.decentralized import TrainState, make_train_step
 from repro.core.gossip import GossipSpec
 from repro.launch import roofline as roof_lib
 from repro.launch import shardings as shard_lib
-from repro.launch.mesh import make_production_mesh, n_workers, worker_axes
+from repro.launch.mesh import WorkerMesh, make_worker_mesh, n_workers
 from repro.models import model as M
 from repro.models.params import abstract_tree
 from repro.optim import momentum_sgd
@@ -167,8 +167,9 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
                       parallel_block: bool = False,
                       moe_shard: str | None = None,
                       save_hlo: str | None = None,
-                      donate: bool = True) -> DryrunResult:
-    cfg = get_config(arch)
+                      donate: bool = True,
+                      reduced: bool = False) -> DryrunResult:
+    cfg = get_config(arch, reduced=True) if reduced else get_config(arch)
     overrides = {}
     if moe_dispatch:
         overrides["moe_dispatch"] = moe_dispatch
@@ -181,46 +182,48 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
     if overrides:
         import dataclasses as _dc
         cfg = _dc.replace(cfg, **overrides)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    wm = make_worker_mesh(multi_pod=multi_pod)
+    mesh = wm.mesh
     mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
     spec = INPUT_SHAPES[shape_name]
     kind = spec["kind"]
     mode = mode or (cfg.dp_mode if kind == "train" else
-                    ("fsdp" if cfg.dp_mode == "fsdp" else "serve"))
+                    ("fsdp" if cfg.serve_sharding == "fsdp" else "serve"))
     chips = int(np.prod(list(mesh.shape.values())))
     if microbatch is None:
         # default: keep per-microbatch sequences-per-worker small enough that
         # remat carries fit HBM (found via memory_analysis bisection)
-        Mw = n_workers(mesh)
+        Mw = wm.n_workers
         per = INPUT_SHAPES[shape_name]["global_batch"] // Mw if kind_of(shape_name) == "train" else 1
         microbatch = max(per // 2, 1) if kind_of(shape_name) == "train" else 1
-    wa = worker_axes(mesh)
+    wa = wm.worker_axes
     t0 = time.time()
 
     from repro import compat
     with compat.set_mesh(mesh):
         defs = M.model_defs(cfg)
         params_abs = abstract_tree(defs, jnp.dtype(cfg.param_dtype))
-        ins = input_specs(cfg, shape_name, mesh, mode)
+        ins = input_specs(cfg, shape_name, wm, mode)
 
         if kind == "train":
-            topo = make_topology(topology, n_workers(mesh))
-            gspec = GossipSpec(topology=topo, backend=gossip_backend,
-                               worker_axes=wa, period=gossip_period)
+            topo = make_topology(topology, wm.n_workers)
+            gspec = GossipSpec.for_mesh(topo, wm, backend=gossip_backend,
+                                        period=gossip_period)
+            if mode == "gossip":
+                params_abs = _prepend_workers(params_abs, wm.n_workers)
+            pspec = shard_lib.param_pspecs(cfg, wm, mode,
+                                           worker_internal=worker_internal)
             opt = momentum_sgd(1e-2, 0.9)
             loss = lambda p, b: M.loss_fn(p, cfg, b)
             step = make_train_step(loss, opt, gossip=gspec,
                                    mode=mode if mode != "serve" else "allreduce",
-                                   mesh=mesh, compute_stats=False,
-                                   microbatch=microbatch)
-            if mode == "gossip":
-                params_abs = _prepend_workers(params_abs, n_workers(mesh))
-            pspec = shard_lib.param_pspecs(cfg, mesh, mode,
-                                           worker_internal=worker_internal)
+                                   mesh=wm, compute_stats=False,
+                                   microbatch=microbatch,
+                                   param_specs=pspec if mode == "gossip" else None)
             state_abs = TrainState(jax.ShapeDtypeStruct((), jnp.int32),
                                    params_abs, params_abs)  # momentum mirrors
-            state_spec = shard_lib.state_pspecs(cfg, mesh, params_abs, pspec)
-            batch_spec = shard_lib.batch_pspecs(cfg, mesh, "train", mode,
+            state_spec = shard_lib.state_pspecs(cfg, wm, params_abs, pspec)
+            batch_spec = shard_lib.batch_pspecs(cfg, wm, "train", mode,
                                                 worker_internal=worker_internal)
             batch_spec = {k: batch_spec[k] for k in ins}
             fn = jax.jit(
@@ -342,7 +345,35 @@ def main(argv=None) -> int:
     ap.add_argument("--tag", default="")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: host-forced multi-pod WorkerMesh, reduced "
+                         "nemotron, gossip mode (technique ON) must lower")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        # Shrink the production mesh to whatever the forced host device count
+        # allows (set XLA_FLAGS=--xla_force_host_platform_device_count=8).
+        import repro.launch.mesh as mesh_lib
+        n = len(jax.devices())
+        assert n >= 8, f"smoke lane needs ≥8 forced host devices, got {n}"
+        mesh_lib.MULTI_POD = (2, 2, 2)
+        INPUT_SHAPES.setdefault(
+            "train_smoke", dict(seq_len=64, global_batch=8, kind="train"))
+        res = run_one(args.arch or "nemotron-4-340b", "train_smoke",
+                      multi_pod=True, topology=args.topology,
+                      gossip_backend="fused", mode="gossip", reduced=True)
+        if not res.ok:
+            print(res.error)
+            return 2
+        counts = res.coll_counts or {}
+        wm = make_worker_mesh(multi_pod=True)  # same factorization run_one used
+        print(f"SMOKE OK {res.arch} gossip lowering on multipod "
+              f"{mesh_lib.MULTI_POD}: {wm.describe()}; "
+              f"collective-permutes={counts.get('collective-permute', 0)} "
+              f"cp_bytes={int((res.collectives or {}).get('collective-permute', 0))}")
+        assert counts.get("collective-permute", 0) > 0, \
+            "gossip mode must lower to collective-permutes"
+        return 0
 
     if args.all:
         import subprocess

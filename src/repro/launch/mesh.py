@@ -1,10 +1,22 @@
-"""Production mesh construction.
+"""Worker-group meshes: how the device mesh factors into gossip workers.
 
-A function (not a module-level constant) so importing this module never
-touches jax device state; the dry-run forces 512 host devices *before* any
-jax import (see dryrun.py).
+The paper's decentralized graph lives *between* replicas; at scale a replica
+no longer fits one device and must itself be sharded. :class:`WorkerMesh` is
+the single source of truth for that factorization: the device mesh splits
+into **worker axes** (hosting the M decentralized workers — the nodes of the
+gossip topology) × an intra-replica **model axis** (tensor/FSDP sharding of
+each worker's replica, shard factor k). Every layer — shardings, the gossip
+backends, the flat-buffer bus, the dry-run, the train loop — consumes a
+WorkerMesh instead of re-deriving axis splits ad hoc.
+
+Mesh construction is a function (not a module-level constant) so importing
+this module never touches jax device state; the dry-run forces 512 host
+devices *before* any jax import (see dryrun.py).
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Any
 
 import jax
 
@@ -13,12 +25,100 @@ from repro import compat
 SINGLE_POD = (16, 16)                  # 256 chips
 MULTI_POD = (2, 16, 16)                # 2 pods × 256 chips = 512
 
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerMesh:
+    """A device mesh factored into worker axes × an intra-replica model axis.
+
+    Attributes:
+      mesh: the underlying ``jax.sharding.Mesh`` (or abstract mesh).
+      worker_axes: mesh axis name(s) hosting the decentralized workers, e.g.
+        ``('data',)`` or ``('pod', 'data')`` for multi-pod.
+      model_axis: axis sharding each worker's replica (``None`` ⇒ replicas
+        are unsharded; shard factor k = 1).
+    """
+
+    mesh: Any
+    worker_axes: tuple[str, ...]
+    model_axis: str | None = MODEL_AXIS
+
+    @classmethod
+    def from_mesh(cls, mesh, model_axis: str | None = MODEL_AXIS) -> "WorkerMesh":
+        """Factor ``mesh``: every axis except ``model_axis`` hosts workers."""
+        names = tuple(mesh.axis_names)
+        ma = model_axis if model_axis in names else None
+        return cls(mesh=mesh,
+                   worker_axes=tuple(a for a in names if a != ma),
+                   model_axis=ma)
+
+    @classmethod
+    def ensure(cls, mesh_or_wm) -> "WorkerMesh | None":
+        """Normalize: accept a WorkerMesh, a raw mesh, or None."""
+        if mesh_or_wm is None or isinstance(mesh_or_wm, cls):
+            return mesh_or_wm
+        return cls.from_mesh(mesh_or_wm)
+
+    @staticmethod
+    def raw(mesh_or_wm):
+        """The underlying jax mesh from either form (None passes through)."""
+        if isinstance(mesh_or_wm, WorkerMesh):
+            return mesh_or_wm.mesh
+        return mesh_or_wm
+
+    # -- factor sizes -------------------------------------------------------
+    @property
+    def n_workers(self) -> int:
+        out = 1
+        for a in self.worker_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    @property
+    def model_factor(self) -> int:
+        """k — how many ways each worker's replica is sharded."""
+        if self.model_axis is None or self.model_axis not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    # -- PartitionSpec helpers ---------------------------------------------
+    @property
+    def wa(self):
+        """The worker axes as a PartitionSpec entry (name or tuple)."""
+        return self.worker_axes[0] if len(self.worker_axes) == 1 \
+            else self.worker_axes
+
+    def worker_spec(self, *trailing):
+        """P(worker_axes, *trailing) — leading worker dim + given entries."""
+        from jax.sharding import PartitionSpec as P
+        return P(self.wa, *trailing)
+
+    # -- mesh passthrough ---------------------------------------------------
+    @property
+    def axis_names(self):
+        return self.mesh.axis_names
+
+    @property
+    def shape(self):
+        return self.mesh.shape
+
+    def describe(self) -> str:
+        w = "×".join(f"{a}={self.mesh.shape[a]}" for a in self.worker_axes)
+        k = self.model_factor
+        return f"workers[{w}]={self.n_workers} × {self.model_axis or '-'}={k}"
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat.make_mesh(
         shape, axes, axis_types=(compat.AxisType.Auto,) * len(axes))
+
+
+def make_worker_mesh(*, multi_pod: bool = False) -> WorkerMesh:
+    """Production WorkerMesh: (pod×)data workers × 16-way model groups."""
+    return WorkerMesh.from_mesh(make_production_mesh(multi_pod=multi_pod))
 
 
 def make_host_mesh(data: int = 2, model: int = 2, pod: int | None = None):
@@ -34,12 +134,11 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: int | None = None):
 
 
 def worker_axes(mesh) -> tuple[str, ...]:
-    """Mesh axes hosting the decentralized workers (all but 'model')."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    """Mesh axes hosting the decentralized workers (all but 'model').
+
+    Thin wrapper over :class:`WorkerMesh` kept for call-site brevity."""
+    return WorkerMesh.ensure(mesh).worker_axes
 
 
 def n_workers(mesh) -> int:
-    out = 1
-    for a in worker_axes(mesh):
-        out *= mesh.shape[a]
-    return out
+    return WorkerMesh.ensure(mesh).n_workers

@@ -1,11 +1,22 @@
 """Sharding rules: params, batches, and KV caches → PartitionSpecs.
 
-Three data-parallel modes:
+Every function here consumes a :class:`~repro.launch.mesh.WorkerMesh` (raw
+meshes are accepted and factored on entry): worker axes host the gossip
+workers, the model axis shards each worker's replica.
+
+Param-spec modes:
   gossip    — every param leaf gets a leading worker dim sharded over the
-              worker axes; within a worker the model axis shards heads/ff/vocab.
+              worker axes; within a worker the model axis shards heads/ff/
+              vocab (tensor/FSDP-sharded replicas — shard factor k). These
+              specs double as the bus's ``param_specs``: gossip mixes per
+              model shard, so the technique stays ON when a replica no
+              longer fits one device.
   allreduce — params replicated over worker axes (centralized baseline).
-  fsdp      — no worker dim; the `embed` (d_model) logical axis is additionally
-              sharded over the worker axes (nemotron-scale fallback).
+  fsdp      — serving-side layout for huge checkpoints: no worker dim, the
+              `embed` (d_model) logical axis additionally sharded over the
+              worker axes. No longer a *training* mode (the retired
+              technique-off fallback) — decode/prefill of nemotron-scale
+              archs still uses it to spread one replica over the whole mesh.
 """
 from __future__ import annotations
 
@@ -17,16 +28,11 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.launch.mesh import n_workers, worker_axes
+from repro.launch.mesh import WorkerMesh
 from repro.models import model as M
 from repro.models.params import DEFAULT_RULES, tree_specs
 
 PyTree = Any
-
-
-def _wa(mesh) -> Any:
-    wa = worker_axes(mesh)
-    return wa[0] if len(wa) == 1 else wa
 
 
 def param_pspecs(cfg: ModelConfig, mesh, mode: str | None = None,
@@ -37,29 +43,30 @@ def param_pspecs(cfg: ModelConfig, mesh, mode: str | None = None,
              local batch instead (§Perf hillclimb: removes per-layer TP
              activation all-reduces; one gradient psum per step remains).
     """
+    wm = WorkerMesh.ensure(mesh)
     mode = mode or cfg.dp_mode
     defs = M.model_defs(cfg)
     if mode == "gossip":
         if worker_internal == "dp":
             rules = {k: None for k in DEFAULT_RULES}
-            return tree_specs(defs, rules=rules, mesh=mesh,
-                              prefix_axes=(_wa(mesh),))
+            return tree_specs(defs, rules=rules, mesh=wm.mesh,
+                              prefix_axes=(wm.wa,))
         # 'tp' and 'fsdp' share param storage sharding (heads/ff/vocab over
         # 'model'); they differ in the batch spec — with the batch split over
         # 'model' too, XLA gathers the (smaller) weights per layer instead of
         # all-reducing activations: FSDP-within-worker (§Perf hillclimb A).
-        return tree_specs(defs, mesh=mesh, prefix_axes=(_wa(mesh),))
+        return tree_specs(defs, mesh=wm.mesh, prefix_axes=(wm.wa,))
     if mode == "allreduce":
         rules = None
         if cfg.moe_shard == "capacity":
             rules = dict(DEFAULT_RULES)
             rules["experts"] = None
             rules["expert_ff"] = None   # replicate expert weights
-        return tree_specs(defs, rules=rules, mesh=mesh)
+        return tree_specs(defs, rules=rules, mesh=wm.mesh)
     if mode == "fsdp":
         rules = dict(DEFAULT_RULES)
-        rules["embed"] = _wa(mesh)          # shard d_model over worker axes
-        return tree_specs(defs, rules=rules, mesh=mesh)
+        rules["embed"] = wm.wa              # shard d_model over worker axes
+        return tree_specs(defs, rules=rules, mesh=wm.mesh)
     raise ValueError(mode)
 
 
@@ -80,7 +87,7 @@ def state_pspecs(cfg: ModelConfig, mesh, opt_state_like: PyTree,
 
 def batch_pspecs(cfg: ModelConfig, mesh, kind: str, mode: str,
                  worker_internal: str = "tp") -> PyTree:
-    wa = _wa(mesh)
+    wa = WorkerMesh.ensure(mesh).wa
     specs = {}
     if mode == "gossip" and kind == "train":
         # worker_internal 'dp'/'fsdp': split the per-worker batch over 'model'
@@ -100,8 +107,9 @@ def batch_pspecs(cfg: ModelConfig, mesh, kind: str, mode: str,
 
 def _div(n: int, mesh, axis) -> Any:
     """axis if n divides the mesh axis size (tuple axes = product)."""
+    shape = WorkerMesh.ensure(mesh).shape
     names = axis if isinstance(axis, tuple) else (axis,)
-    total = int(np.prod([mesh.shape[a] for a in names]))
+    total = int(np.prod([shape[a] for a in names]))
     return axis if (total > 1 and n % total == 0) else None
 
 
@@ -111,7 +119,8 @@ def cache_pspecs(cfg: ModelConfig, mesh, batch: int) -> PyTree:
     from repro.models.rglru import RGLRUCache
     from repro.models.ssm import MambaCache
 
-    wa = _wa(mesh)
+    wm = WorkerMesh.ensure(mesh)
+    mesh, wa = wm, wm.wa
     b_ax = _div(batch, mesh, wa)
 
     def kv_spec():
@@ -160,7 +169,7 @@ def cache_pspecs(cfg: ModelConfig, mesh, batch: int) -> PyTree:
 
 
 def cross_kv_pspecs(cfg: ModelConfig, mesh, batch: int) -> PyTree:
-    wa = _wa(mesh)
+    wa = WorkerMesh.ensure(mesh).wa
     b_ax = _div(batch, mesh, wa)
     h_ax = _div(cfg.n_kv_heads, mesh, "model")
     segs = M.plan_segments(cfg)

@@ -1,3 +1,10 @@
-from repro.serving.engine import GenerationResult, WaveBatcher, generate, make_serve_step
+from repro.serving.engine import (
+    GenerationResult,
+    WaveBatcher,
+    generate,
+    load_consensus_params,
+    make_serve_step,
+)
 
-__all__ = ["GenerationResult", "WaveBatcher", "generate", "make_serve_step"]
+__all__ = ["GenerationResult", "WaveBatcher", "generate",
+           "load_consensus_params", "make_serve_step"]

@@ -18,6 +18,40 @@ from repro.models import model as M
 PyTree = Any
 
 
+def load_consensus_params(path: str, cfg: ModelConfig, *, dtype=None) -> PyTree:
+    """Decode-ready params from a gossip-trained checkpoint.
+
+    The checkpoint may be worker-stacked (every leaf carries the leading M
+    dim the decentralized trainer keeps) or already consensus-averaged; the
+    stacked case is restored into an (M, ...) tree and collapsed via
+    ``checkpoint.consensus_params`` — the paper's output model
+    w̄ = (1/M)Σ w_j — before serving."""
+    import numpy as np
+
+    from repro.models.params import abstract_tree
+    from repro.train import checkpoint as ckpt_lib
+
+    defs = M.model_defs(cfg)
+    # abstract templates only — restore() reads .shape/.dtype, so no zero
+    # pytree is ever allocated (matters at nemotron scale: like + its
+    # Mw-stacked variant would be TBs of dead zeros)
+    like = abstract_tree(defs, jnp.dtype(dtype or cfg.param_dtype))
+    p = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(p)
+    # worker-stacked iff stored leaves carry one extra leading dim vs `like`
+    # (bf16 leaves are stored as a same-shape uint16 view, so ndim is stable)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    by_key = {ckpt_lib._path_key(pk): leaf for pk, leaf in leaves_paths}
+    f0 = data.files[0]
+    leaf0 = by_key[ckpt_lib._base_key(f0)]
+    if data[f0].ndim == len(leaf0.shape) + 1:
+        Mw = data[f0].shape[0]
+        stacked_like = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((Mw,) + s.shape, s.dtype), like)
+        return ckpt_lib.consensus_params(ckpt_lib.restore(path, stacked_like))
+    return ckpt_lib.restore(path, like)
+
+
 def make_serve_step(cfg: ModelConfig):
     """serve_step(params, caches, token [, memory, cross_kvs]) -> (logits, caches).
 

@@ -18,10 +18,14 @@ PyTree = Any
 _BF16_TAG = "::bf16"
 
 
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = _path_key(path)
         arr = np.asarray(leaf)
         if str(arr.dtype) == "bfloat16":
             key, arr = key + _BF16_TAG, np.ascontiguousarray(arr).view(np.uint16)
@@ -31,6 +35,13 @@ def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
             arr = arr.astype(np.float32)
         flat[key] = arr
     return flat
+
+
+def _flatten_keys(tree: PyTree) -> set[str]:
+    """Untagged leaf keys WITHOUT materializing leaves — works for abstract
+    (ShapeDtypeStruct) templates as well as concrete arrays."""
+    return {_path_key(p)
+            for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]}
 
 
 def save(path: str, tree: PyTree, step: int | None = None) -> None:
@@ -51,19 +62,21 @@ def restore(path: str, like: PyTree) -> PyTree:
 
     Storage-format agnostic: a leaf may be stored tagged (bf16 bit pattern)
     or plain (fp32-widened legacy checkpoints), independent of the dtype of
-    `like` — only the *set of leaves* must match.
+    `like` — only the *set of leaves* must match. `like` leaves only need
+    ``.shape``/``.dtype``, so abstract ``ShapeDtypeStruct`` templates work —
+    no zero-tree allocation for large restores.
     """
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path)
     stored_by_key = {_base_key(f): f for f in data.files}
-    like_keys = {_base_key(k) for k in _flatten_with_paths(like)}
+    like_keys = _flatten_keys(like)
     assert set(stored_by_key) == like_keys, (
         sorted(set(stored_by_key) ^ like_keys)[:5])
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path_k, leaf in leaves_paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        key = _path_key(path_k)
         stored = stored_by_key[key]
         raw = data[stored]
         if stored.endswith(_BF16_TAG):
@@ -72,6 +85,64 @@ def restore(path: str, like: PyTree) -> PyTree:
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def consensus_params(params_M: PyTree) -> PyTree:
+    """Average the leading worker dim away: one serving replica.
+
+    A gossip-trained checkpoint stores every worker's estimate w_j stacked on
+    a leading M dim; the paper's output model is the consensus average
+    w̄ = (1/M) Σ_j w_j. Averaging happens in fp32 and casts back, so bf16
+    checkpoints don't lose a bit more than the final cast."""
+    return jax.tree.map(
+        lambda x: jnp.mean(jnp.asarray(x, jnp.float32), axis=0).astype(x.dtype),
+        params_M)
+
+
+def export_consensus(src: str | PyTree, dst: str | None = None,
+                     step: int | None = None) -> PyTree:
+    """Collapse a gossip checkpoint (leading worker dim) to a serving one.
+
+    ``src`` is a checkpoint path (leaves loaded as stored) or an in-memory
+    worker-stacked pytree. The averaged single-replica tree is returned and,
+    when ``dst`` is given, saved as a normal checkpoint that
+    ``serving.engine.load_consensus_params`` (or plain :func:`restore`)
+    can feed straight into prefill/decode."""
+    if isinstance(src, str):
+        path = src if src.endswith(".npz") else src + ".npz"
+        data = np.load(path)
+        leaves = {}
+        for stored in data.files:
+            raw = data[stored]
+            if stored.endswith(_BF16_TAG):
+                raw = raw.view(jnp.bfloat16.dtype)
+            leaves[_base_key(stored)] = raw
+        tree = _unflatten_keys(leaves)
+        if step is None:
+            # save() keys the .meta.json on the caller's spelling, which may
+            # or may not include the .npz suffix — probe both.
+            step = latest_step(path)
+            if step is None and path != src:
+                step = latest_step(src)
+    else:
+        tree = src
+    mean = consensus_params(tree)
+    if dst is not None:
+        save(dst, mean, step=step)
+    return mean
+
+
+def _unflatten_keys(flat: dict[str, Any]) -> PyTree:
+    """'a/b/0' keyed dict → nested dict tree (lists stay int-keyed dicts —
+    consensus averaging and re-saving only need the leaves + stable keys)."""
+    out: dict[str, Any] = {}
+    for key, leaf in flat.items():
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return out
 
 
 def latest_step(path: str) -> int | None:

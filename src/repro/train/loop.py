@@ -39,6 +39,27 @@ class History:
         self.param_spread.append(float(m.param_spread))
         self.step_time.append(dt)
 
+    def extend_from_device(self, pending: list[StepMetrics],
+                           window_start: float) -> None:
+        """Batched host transfer: ONE device_get for a whole log window.
+
+        The per-step ``float()`` calls in :meth:`append` each forced a
+        device→host sync, serializing dispatch with the device — five
+        blocking transfers *per step*. Here the device arrays accumulate
+        asynchronously and land in one ``jax.device_get`` per ``log_every``
+        window (EXPERIMENTS.md §Perf, "Batched metric host-sync").
+
+        The window is clocked AFTER the (blocking) transfer: device_get
+        waits for every step in the window to finish, so the recorded
+        per-step time covers real execution, not just async dispatch.
+        """
+        if not pending:
+            return
+        host = jax.device_get(pending)
+        dt = (time.perf_counter() - window_start) / len(pending)
+        for m in host:
+            self.append(m, dt)
+
     def as_arrays(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in dataclasses.asdict(self).items()}
 
@@ -53,39 +74,65 @@ def train(
     gossip: GossipSpec | None = None,
     mode: str = "gossip",
     mesh=None,
+    param_specs: PyTree | None = None,
     log_every: int = 50,
     ckpt_path: str | None = None,
     ckpt_every: int = 0,
     verbose: bool = True,
 ) -> tuple[TrainState, History]:
-    """Run `steps` iterations; `batches` yields per-step batch pytrees."""
+    """Run `steps` iterations; `batches` yields per-step batch pytrees.
+
+    ``mesh`` accepts a raw jax mesh or a :class:`~repro.launch.mesh.WorkerMesh`;
+    ``param_specs`` (shardings.param_pspecs output) composes gossip with
+    model-sharded replicas — see core/bus.mix_bus.
+
+    Host/device sync discipline: metrics are NOT fetched per step — device
+    arrays accumulate and transfer in one batch per ``log_every`` window
+    (plus checkpoint/final boundaries), so step dispatch runs ahead of the
+    device instead of blocking five times per iteration.
+    """
     # Donating the state makes the step in-place on HBM: the params / opt
     # buffers (and the gossip bus pack buffers) reuse the incoming allocation
     # instead of doubling the parameter footprint every iteration. The
     # caller's params0 leaves are copied first — donation would otherwise
     # delete them out from under the caller on backends where it is real.
+    from repro.launch.mesh import WorkerMesh
+
+    raw_mesh = WorkerMesh.raw(mesh)
     step_fn = jax.jit(make_train_step(loss_fn, optimizer, gossip=gossip,
-                                      mode=mode, mesh=mesh),
+                                      mode=mode, mesh=mesh,
+                                      param_specs=param_specs),
                       donate_argnums=(0,))
     params0 = jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x,
                            params0)
     state = init_state(params0, optimizer)
     hist = History()
     it = iter(batches)
-    ctx = compat.set_mesh(mesh) if mesh is not None else _nullcontext()
+    pending: list[StepMetrics] = []
+    t_win = time.perf_counter()
+
+    def flush() -> None:
+        nonlocal t_win
+        hist.extend_from_device(pending, t_win)
+        pending.clear()
+        t_win = time.perf_counter()
+
+    ctx = compat.set_mesh(raw_mesh) if raw_mesh is not None else _nullcontext()
     with ctx:
         for k in range(steps):
             batch = next(it)
-            t0 = time.perf_counter()
             state, metrics = step_fn(state, batch)
-            metrics = jax.tree.map(lambda x: x.block_until_ready(), metrics)
-            hist.append(metrics, time.perf_counter() - t0)
-            if verbose and (k % log_every == 0 or k == steps - 1):
-                print(f"step {k:5d}  loss {hist.loss[-1]:.5f}  "
-                      f"E {hist.grad_energy[-1]:.3e}  Esp {hist.grad_spread[-1]:.3e}  "
-                      f"spread {hist.param_spread[-1]:.3e}")
+            pending.append(metrics)
+            if k % log_every == 0 or k == steps - 1:
+                flush()
+                if verbose:
+                    print(f"step {k:5d}  loss {hist.loss[-1]:.5f}  "
+                          f"E {hist.grad_energy[-1]:.3e}  Esp {hist.grad_spread[-1]:.3e}  "
+                          f"spread {hist.param_spread[-1]:.3e}")
             if ckpt_path and ckpt_every and (k + 1) % ckpt_every == 0:
+                flush()
                 ckpt_lib.save(ckpt_path, state.params, step=k + 1)
+    flush()
     if ckpt_path:
         ckpt_lib.save(ckpt_path, state.params, step=steps)
     return state, hist

@@ -213,6 +213,73 @@ def test_fused_chunked_matches_unchunked():
                                       np.asarray(b, np.float32))
 
 
+# ---------------------------------------------------------------------------
+# Double-buffered chunked path vs the dense oracle (dtypes × uneven rows)
+# ---------------------------------------------------------------------------
+
+# Tolerances per dtype: the oracle mixes in the leaf dtype; the bus kernel
+# accumulates in fp32 and casts once — bf16 agreement is one rounding step.
+_TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-6),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _uneven_tree(M, dtype, seed=3):
+    """Row counts that do NOT split evenly into chunks: 5 blocks of 32 rows
+    at BLK (640 payload rows / chunk sizes 2-2-1 for nchunks=3) plus a tail
+    leaf straddling the last tile."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t = {
+        "a": jax.random.normal(ks[0], (M, 155, 128)),   # 19840 elems
+        "b": jax.random.normal(ks[1], (M, 37)),         # ragged tail
+        "c": jax.random.normal(ks[2], (M, 3, 129)),     # crosses a lane row
+    }
+    return jax.tree.map(lambda x: x.astype(dtype), t)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nchunks", [2, 3, 5])
+def test_chunked_mix_matches_dense_oracle(dtype, nchunks):
+    """nchunks > 1 pipelined slicing vs the dense W·A oracle — the chunk
+    boundaries (uneven whole-block splits) must not perturb any element."""
+    M = 4
+    topo = T.undirected_ring(M)
+    params = _uneven_tree(M, dtype)
+    spec = GossipSpec(topology=topo, backend="fused")
+    out = bus.mix_bus(params, spec, None, nchunks=nchunks, **BLK)
+    ref = mix_pytree_reference(
+        jax.tree.map(lambda x: x.astype(jnp.float32), params), topo.A)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        assert a.dtype == dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **_TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunked_mix_and_update_matches_oracle(dtype):
+    """Chunked fused mix−η·u vs oracle chain, both dtypes, mixed-dtype tree
+    (two dtype groups chunk independently)."""
+    M = 4
+    topo = T.ring_lattice(M, 2)
+    params = _uneven_tree(M, dtype)
+    params["extra32"] = jax.random.normal(jax.random.PRNGKey(9), (M, 41, 7))
+    updates = jax.tree.map(
+        lambda x: jax.random.normal(KEY, x.shape).astype(x.dtype), params)
+    spec = GossipSpec(topology=topo, backend="fused")
+    eta = 0.25
+    out = bus.mix_bus(params, spec, None, updates=updates, eta=eta,
+                      nchunks=3, **BLK)
+    pf = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    uf = jax.tree.map(lambda x: x.astype(jnp.float32), updates)
+    ref = jax.tree.map(lambda m, u: m - np.float32(eta) * u,
+                       mix_pytree_reference(pf, topo.A), uf)
+    for a, b, p in zip(jax.tree.leaves(out), jax.tree.leaves(ref),
+                       jax.tree.leaves(params)):
+        assert a.dtype == p.dtype
+        tol = _TOL[jnp.bfloat16] if p.dtype == jnp.bfloat16 else _TOL[jnp.float32]
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **tol)
+
+
 def test_mix_pytree_dispatches_fused():
     M = 4
     topo = T.undirected_ring(M)
@@ -275,6 +342,105 @@ for topo in [T.undirected_ring(4), T.clique(4), T.directed_ring_lattice(4, 2)]:
 print("bus-sharded-ok")
 """)
     assert "bus-sharded-ok" in out
+
+
+@pytest.mark.slow
+def test_model_sharded_bus_bytes_drop_by_k():
+    """Worker-group composition (WorkerMesh): with each replica tensor-sharded
+    k ways over 'model', the bus packs per-model-shard buffers and its bulk
+    ppermutes move ~1/k the per-device bytes of the unsharded path — at the
+    SAME collective count — and the mixed result still matches the dense
+    oracle. This is the HLO-level contract that lets the paper's technique
+    run where a replica no longer fits one device."""
+    out = run_in_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import topology as T, bus
+from repro.core.gossip import GossipSpec, mix_pytree_reference
+from repro.launch.hlo_cost import analyze_hlo
+
+M = 4
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (M, 256, 8, 128)),   # dim2 shards /k
+          "emb": jax.random.normal(key, (M, 1024, 256)),   # dim2 shards /k
+          "v": jax.random.normal(key, (M, 33, 5))}         # indivisible: repl
+topo = T.undirected_ring(M)
+ref = mix_pytree_reference(params, topo.A)
+stats = {}
+for k in (1, 2):
+    mesh = compat.make_mesh((M, k), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2,
+                            devices=jax.devices()[: M * k])
+    spec = GossipSpec(topology=topo, backend="fused", worker_axes=("data",),
+                      model_axis="model" if k > 1 else None)
+    m_ax = "model" if k > 1 else None
+    pspecs = {"w": P("data", None, m_ax, None),
+              "emb": P("data", None, m_ax),
+              "v": P("data", None, None)}
+    with compat.set_mesh(mesh):
+        p = jax.tree.map(lambda x, s: jax.device_put(
+            x, jax.NamedSharding(mesh, s)), params, pspecs)
+        f = jax.jit(lambda q: bus.mix_bus(q, spec, mesh, param_specs=pspecs))
+        out = f(p)
+        hlo = f.lower(p).compile().as_text()
+    hc = analyze_hlo(hlo)
+    stats[k] = (hc.coll_counts["collective-permute"],
+                hc.coll_bytes["collective-permute"])
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        assert np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=1e-5, atol=1e-6), ("numerics", k)
+# degree-2 ring: exactly 2 bulk collectives at EVERY shard factor
+assert stats[1][0] == 2 and stats[2][0] == 2, stats
+ratio = stats[1][1] / stats[2][1]
+assert 1.8 < ratio < 2.2, ("per-device cp bytes must drop ~1/k", stats, ratio)
+print(f"sharded-bytes-ok ratio={ratio:.3f}")
+""")
+    assert "sharded-bytes-ok" in out
+
+
+@pytest.mark.slow
+def test_model_sharded_fused_train_step_matches_meshless():
+    """End-to-end make_train_step with param_specs on a (workers × model)
+    WorkerMesh ≡ the meshless fused step (same topology, same data)."""
+    out = run_in_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import topology as T
+from repro.core.gossip import GossipSpec
+from repro.core.decentralized import make_train_step, init_state, replicate_for_workers
+from repro.launch.mesh import WorkerMesh, make_host_mesh
+from repro.optim import momentum_sgd
+
+M = 4
+topo = T.undirected_ring(M)
+def loss(p, b): return jnp.sum((p["x"] - b) ** 2)
+targets = jnp.arange(M * 8, dtype=jnp.float32).reshape(M, 8)
+opt = momentum_sgd(0.05, 0.9)
+
+# meshless reference (single-process bus emulation)
+spec0 = GossipSpec(topology=topo, backend="fused")
+s0 = init_state(replicate_for_workers({"x": jnp.zeros(8)}, M), opt)
+step0 = jax.jit(make_train_step(loss, opt, gossip=spec0, mode="gossip"))
+for _ in range(10):
+    s0, _ = step0(s0, targets)
+
+# WorkerMesh: 4 workers x 2-way model sharding of the replica
+wm = WorkerMesh.from_mesh(make_host_mesh(data=4, model=2))
+spec = GossipSpec.for_mesh(topo, wm, backend="fused")
+pspecs = {"x": P("data", "model")}
+with compat.set_mesh(wm.mesh):
+    s1 = init_state(replicate_for_workers({"x": jnp.zeros(8)}, M), opt)
+    step1 = jax.jit(make_train_step(loss, opt, gossip=spec, mode="gossip",
+                                    mesh=wm, param_specs=pspecs))
+    for _ in range(10):
+        s1, _ = step1(s1, targets)
+np.testing.assert_allclose(np.asarray(s0.params["x"]), np.asarray(s1.params["x"]),
+                           rtol=1e-5, atol=1e-6)
+print("mesh-train-ok")
+""")
+    assert "mesh-train-ok" in out
 
 
 def test_degenerate_single_worker():

@@ -84,3 +84,74 @@ def test_restore_rejects_mismatched_structure(tmp_path):
     C.save(path, {"a": jnp.zeros(3)})
     with pytest.raises(AssertionError):
         C.restore(path, {"b": jnp.zeros(3)})
+
+
+# ---------------------------------------------------------------------------
+# Consensus export: worker-stacked gossip checkpoint → one serving replica
+# ---------------------------------------------------------------------------
+
+
+def test_consensus_params_averages_worker_dim():
+    M = 4
+    rng = np.random.default_rng(3)
+    stacked = {"w": jnp.asarray(rng.normal(size=(M, 6, 2)), jnp.float32),
+               "b": {"x": jnp.asarray(rng.normal(size=(M, 5)), jnp.bfloat16)}}
+    mean = C.consensus_params(stacked)
+    assert mean["w"].shape == (6, 2) and mean["b"]["x"].shape == (5,)
+    assert mean["b"]["x"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(mean["w"]),
+                               np.asarray(stacked["w"]).mean(0), rtol=1e-6)
+
+
+def test_export_consensus_file_roundtrip(tmp_path):
+    """save(gossip ckpt) → export_consensus → restore as single replica."""
+    M = 4
+    rng = np.random.default_rng(4)
+    stacked = {"w": jnp.asarray(rng.normal(size=(M, 8, 3)), jnp.float32),
+               "emb": jnp.asarray(rng.normal(size=(M, 7)), jnp.bfloat16)}
+    src = os.path.join(tmp_path, "gossip.npz")
+    dst = os.path.join(tmp_path, "serve.npz")
+    C.save(src, stacked, step=11)
+    mean = C.export_consensus(src, dst)
+    assert mean["w"].shape == (8, 3)
+    like = {"w": jnp.zeros((8, 3), jnp.float32),
+            "emb": jnp.zeros((7,), jnp.bfloat16)}
+    back = C.restore(dst, like)
+    np.testing.assert_allclose(np.asarray(back["w"]),
+                               np.asarray(stacked["w"]).mean(0),
+                               rtol=1e-6, atol=1e-6)
+    assert back["emb"].dtype == jnp.bfloat16
+    assert C.latest_step(dst) == 11        # step metadata carries over
+
+
+def test_load_consensus_params_detects_stacked_and_flat(tmp_path):
+    """serving.engine loads either a worker-stacked or an already-exported
+    checkpoint into the model's parameter structure."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M_
+    from repro.serving.engine import load_consensus_params
+
+    cfg = get_config("granite-3-2b", reduced=True)
+    params = M_.init(jax.random.PRNGKey(0), cfg)
+    Mw = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (Mw,) + x.shape) *
+        jnp.arange(1, Mw + 1, dtype=x.dtype).reshape((Mw,) + (1,) * x.ndim),
+        params)
+    src = os.path.join(tmp_path, "gossip.npz")
+    C.save(src, stacked)
+    loaded = load_consensus_params(src, cfg)
+    want = jax.tree.map(lambda x: x * 2.0, params)  # mean of 1x,2x,3x = 2x
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    flat = os.path.join(tmp_path, "serve.npz")
+    C.export_consensus(src, flat)
+    loaded2 = load_consensus_params(flat, cfg)
+    for a, b in zip(jax.tree.leaves(loaded2), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-6, atol=1e-6)

@@ -80,6 +80,26 @@ print("equiv-ok")
 
 
 @pytest.mark.slow
+def test_nemotron_gossip_dryrun_technique_on():
+    """nemotron-4-340b (reduced shapes, full distribution config) lowers in
+    GOSSIP mode on the multi-pod worker mesh — the technique-on flip that
+    worker-group meshes buy; gossip must show up as bulk collective-permutes."""
+    out = run_in_subprocess("""
+import repro.launch.mesh as mesh_lib
+mesh_lib.MULTI_POD = (2, 2, 2)
+import repro.launch.dryrun as dr
+dr.INPUT_SHAPES.update({"train_4k": dict(seq_len=64, global_batch=8, kind="train")})
+res = dr.run_one("nemotron-4-340b", "train_4k", multi_pod=True,
+                 gossip_backend="fused", reduced=True)
+assert res.ok, res.error
+assert res.mode == "gossip", res.mode
+assert res.coll_counts["collective-permute"] > 0, res.coll_counts
+print("nemotron-gossip-ok", res.coll_counts)
+""")
+    assert "nemotron-gossip-ok" in out
+
+
+@pytest.mark.slow
 def test_dryrun_small_mesh_end_to_end():
     """The dry-run machinery itself on a 4x2 host-device mesh with reduced
     configs — one arch per family, all three shape kinds."""
