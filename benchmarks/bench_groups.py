@@ -7,14 +7,20 @@ bus path in core/bus.py) claims two HLO-level invariants:
   collective-permute per non-identity Birkhoff permutation — at EVERY shard
   factor k (sharding the replica must not fragment the exchange);
 * **per-device collective bytes** drop ~1/k: each device packs only its
-  local model shard of the replica, so the paper's O(degree) per-worker
-  exchange is also O(1/k) per device — the property that lets the technique
-  run where a replica no longer fits one device (nemotron-4-340b).
+  1/k of the replica by flat-buffer rows (bus layout v2 — tensor-sharded
+  leaves as local shards, indivisible leaves row-split), so the paper's
+  O(degree) per-worker exchange is also O(1/k) per device — the property
+  that lets the technique run where a replica no longer fits one device
+  (nemotron-4-340b).
 
 This bench compiles the fused bus mix on forced host-device meshes
 (M workers × k model shards), measures both quantities from the partitioned
-HLO via launch/hlo_cost, and asserts them. Results land in
-results/bench/groups.json (CI uploads the artifact).
+HLO via launch/hlo_cost, and asserts them — including the layout-v2 **byte
+efficiency gate**: per-device cp bytes must stay within 0.95× of the ideal
+``degree × bytes(params)/k`` (the pre-v2 layout sat at 0.89× at k=4 from
+32-row tile padding + replicated indivisible leaves). Results land in
+results/bench/groups.json plus the padding sweep in
+results/bench/groups_padding.json (CI uploads both artifacts).
 """
 from __future__ import annotations
 
@@ -48,7 +54,8 @@ def topo_of(d):
 key = jax.random.PRNGKey(0)
 params = {"w": jax.random.normal(key, (M, 256, 8, 128)),   # shards /k on dim2
           "emb": jax.random.normal(key, (M, 1024, 256)),
-          "v": jax.random.normal(key, (M, 33, 5))}         # indivisible: repl
+          "v": jax.random.normal(key, (M, 33, 5))}         # indivisible: row-split
+payload_bytes = sum(int(x.nbytes) // M for x in params.values())
 rows = []
 for d in DEGREES:
     topo = topo_of(d)
@@ -77,6 +84,7 @@ for d in DEGREES:
         hc = analyze_hlo(hlo)
         rows.append({
             "degree": d, "shard_factor_k": k, "workers": M,
+            "payload_bytes_per_worker": payload_bytes,
             "cp_count": hc.coll_counts["collective-permute"],
             "cp_bytes_per_device": hc.coll_bytes["collective-permute"],
         })
@@ -100,18 +108,38 @@ def run(quick: bool = False) -> list[dict]:
     line = next(l for l in res.stdout.splitlines() if l.startswith("JSON:"))
     raw = json.loads(line[len("JSON:"):])
 
-    rows = []
+    rows, padding = [], []
     base = {r["degree"]: r["cp_bytes_per_device"]
             for r in raw if r["shard_factor_k"] == 1}
     for r in raw:
         d, k = r["degree"], r["shard_factor_k"]
         ratio = base[d] / r["cp_bytes_per_device"]
+        # layout-v2 byte contract: per-device cp bytes vs the ideal
+        # degree × bytes(params)/k — anything below 0.95 means tile padding
+        # or replicated leaves crept back into the bulk collectives.
+        ideal = d * r["payload_bytes_per_worker"] / k
+        eff = ideal / r["cp_bytes_per_device"]
         row = dict(r, bench="groups",
                    combo=f"deg{d}_k{k}",
-                   bytes_ratio_vs_k1=ratio)
+                   bytes_ratio_vs_k1=ratio,
+                   ideal_cp_bytes_per_device=ideal,
+                   byte_efficiency=eff)
+        rows.append(row)
+        padding.append({
+            "bench": "groups_padding", "combo": row["combo"],
+            "cp_bytes_per_device": r["cp_bytes_per_device"],
+            "ideal_cp_bytes_per_device": ideal,
+            "byte_efficiency": eff,
+            "padding_overhead_pct": 100.0 * (1.0 / eff - 1.0),
+        })
+    # Artifacts are written BEFORE the gate so a failing lane still uploads
+    # the sweep that shows the regression (CI uploads with `if: always()`).
+    common.save_json("groups", rows)
+    common.save_json("groups_padding", padding)
+    for row in rows:
+        d, k = row["degree"], row["shard_factor_k"]
         # HLO-level contracts of the worker-group composition:
         assert row["cp_count"] == d, row        # one bulk collective per perm
-        assert ratio > 0.75 * k, row            # per-device bytes ~ 1/k
-        rows.append(row)
-    common.save_json("groups", rows)
+        assert row["bytes_ratio_vs_k1"] > 0.75 * k, row  # bytes ~ 1/k
+        assert row["byte_efficiency"] >= 0.95, row  # gate: ≤5% pad overhead
     return rows

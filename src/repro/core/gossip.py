@@ -59,8 +59,10 @@ class GossipSpec:
         e.g. ('data',) or ('pod', 'data') for multi-pod.
       model_axis: intra-replica sharding axis (WorkerMesh.model_axis) or
         None. When set, the fused bus gossips *per model shard*: each device
-        packs only its local 1/k of the replica and the bulk ppermutes move
-        1/k the bytes — gossip composes with tensor/FSDP-sharded replicas.
+        packs exactly its 1/k of the replica by flat-buffer rows (layout v2 —
+        tensor-sharded leaves as local shards, indivisible leaves row-split)
+        and the bulk ppermutes move 1/k the bytes with zero replicated-leaf
+        traffic — gossip composes with tensor/FSDP-sharded replicas.
       period: gossip every `period` optimizer steps (1 = paper's synchronous
         DSM; >1 = local-SGD-style beyond-paper variant).
       time_varying: None (static topology) or 'one_peer_exp' — beyond-paper:

@@ -5,9 +5,10 @@ Two entry points:
 * :func:`gossip_mix_leaf` — one leaf of any shape, padded to the 2-D tile
   grid and run through the Pallas kernel (kept for tests / ad-hoc use).
 * :func:`gossip_mix_pytree` — the whole pytree packs ONCE into the flat bus
-  layout (`repro.core.bus.BusLayout`, cached flatten/unflatten with per-leaf
-  offsets) and runs ONE kernel call per dtype group, instead of the old
-  per-leaf Python loop of pad/stack/kernel dispatches.
+  layout (`repro.core.bus.BusLayout` — the layout-v2 two-pass plan: cached
+  flatten/unflatten with per-leaf row-range slots, rows in whole sublane
+  tiles with a lane-padded tail) and runs ONE kernel call per dtype group,
+  instead of the old per-leaf Python loop of pad/stack/kernel dispatches.
 
 `interpret=True` (default, for CPU) executes the kernel body in Python for
 validation; on TPU pass interpret=False.
@@ -59,11 +60,11 @@ def gossip_mix_pytree(params: PyTree, neighbor_params: list[PyTree],
                       block_r: int = DEFAULT_BLOCK_R,
                       block_c: int = DEFAULT_BLOCK_C) -> PyTree:
     """Fused kernel over a pytree via the flat bus layout (one pack, one
-    kernel dispatch per dtype group — not one per leaf)."""
+    kernel dispatch per dtype group — not one per leaf). Uses the cached
+    layout-v2 plan with a single shard (shards=1: every leaf packs whole)."""
     from repro.core import bus
 
-    layout = bus.plan_layout(params, lead_ndim=0,
-                             block_r=block_r, block_c=block_c)
+    layout = bus.plan_layout(params, lead_ndim=0, block_r=block_r)
     self_bufs = bus.pack(params, layout, lead_ndim=0)
     nbr_bufs = [bus.pack(nb, layout, lead_ndim=0) for nb in neighbor_params]
     upd_bufs = bus.pack(updates, layout, lead_ndim=0)
@@ -74,5 +75,5 @@ def gossip_mix_pytree(params: PyTree, neighbor_params: list[PyTree],
         nbrs = jnp.stack([nb[gi] for nb in nbr_bufs])
         outs.append(gossip_mix_2d(
             self_bufs[gi], nbrs, weights, upd_bufs[gi], eta_arr,
-            block_r=g.block_r, block_c=g.cols, interpret=interpret))
+            block_r=g.block_r, block_c=block_c, interpret=interpret))
     return bus.unpack(outs, layout, lead_ndim=0)

@@ -94,6 +94,17 @@ class WorkerMesh:
         from jax.sharding import PartitionSpec as P
         return P(self.wa, *trailing)
 
+    def bus_row_tile(self, dtype="float32") -> int:
+        """Row-count quantum of the gossip bus (layout v2) on this mesh.
+
+        The bus plans every dtype group's flat-buffer rows as a multiple of
+        ``sublane(dtype) × model_factor``, so each model shard owns whole
+        sublane tiles and the buffer splits over the model axis by rows with
+        no re-tiling (`repro.core.bus.plan_layout` pass 1).
+        """
+        from repro.core.bus import sublane_rows
+        return sublane_rows(dtype) * self.model_factor
+
     # -- mesh passthrough ---------------------------------------------------
     @property
     def axis_names(self):

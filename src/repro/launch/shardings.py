@@ -10,7 +10,13 @@ Param-spec modes:
               vocab (tensor/FSDP-sharded replicas — shard factor k). These
               specs double as the bus's ``param_specs``: gossip mixes per
               model shard, so the technique stays ON when a replica no
-              longer fits one device.
+              longer fits one device. Leaves whose logical axes do NOT
+              divide by k (MQA/GQA kv heads, small norms/biases) fall back
+              to replicated *storage* here — but they no longer replicate on
+              the gossip bus: layout v2 row-splits every such leaf over the
+              model axis by flat-buffer rows (:func:`bus_row_split_flags`),
+              so the old replicated-leaf carve-out costs zero inter-worker
+              bytes.
   allreduce — params replicated over worker axes (centralized baseline).
   fsdp      — serving-side layout for huge checkpoints: no worker dim, the
               `embed` (d_model) logical axis additionally sharded over the
@@ -68,6 +74,30 @@ def param_pspecs(cfg: ModelConfig, mesh, mode: str | None = None,
         rules["embed"] = wm.wa              # shard d_model over worker axes
         return tree_specs(defs, rules=rules, mesh=wm.mesh)
     raise ValueError(mode)
+
+
+def bus_row_split_flags(param_specs: PyTree, mesh) -> PyTree:
+    """Which leaves the gossip bus row-splits over the model axis.
+
+    Returns a bool pytree mirroring ``param_specs``: True for leaves whose
+    spec does NOT shard over the WorkerMesh's model axis — exactly the
+    leaves the pre-v2 bus shipped fully replicated through every bulk
+    ppermute, and that layout v2 instead assigns a 1/k row range of the flat
+    buffer (`repro.core.bus.plan_layout` pass 2). Diagnostic/benchmark
+    helper; the bus derives the same flags internally from ``param_specs``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.bus import sharded_leaf_flags
+
+    wm = WorkerMesh.ensure(mesh)
+    ma = wm.model_axis if wm is not None and wm.model_factor > 1 else None
+    is_p = lambda s: s is None or isinstance(s, P)
+    leaves, treedef = jax.tree_util.tree_flatten(param_specs, is_leaf=is_p)
+    if ma is None:  # k == 1: every leaf packs whole — nothing row-splits
+        return jax.tree_util.tree_unflatten(treedef, [False] * len(leaves))
+    flags = sharded_leaf_flags(leaves, ma)
+    return jax.tree_util.tree_unflatten(treedef, [not f for f in flags])
 
 
 def state_pspecs(cfg: ModelConfig, mesh, opt_state_like: PyTree,

@@ -1,6 +1,14 @@
-"""Pytree checkpointing (numpy .npz — no external deps, restartable runs)."""
+"""Pytree checkpointing (numpy .npz — no external deps, restartable runs).
+
+:class:`AsyncCheckpointWriter` moves the ``np.savez`` disk write off the
+training-loop thread: ``save()`` snapshots the tree with a *device-side*
+copy and returns immediately; a single background thread device-gets and
+writes the snapshot while the loop keeps dispatching steps.
+"""
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import json
 import os
 from typing import Any
@@ -51,6 +59,55 @@ def save(path: str, tree: PyTree, step: int | None = None) -> None:
     if step is not None:
         with open(path + ".meta.json", "w") as f:
             json.dump({"step": int(step)}, f)
+
+
+class AsyncCheckpointWriter:
+    """Background checkpoint writer: snapshot on call, ``np.savez`` off-thread.
+
+    The train loop donates its state, so the step-k params buffers are
+    overwritten in place by step k+1 — handing the *live* arrays to a writer
+    thread would race the donation (torn read, or a deleted-buffer error).
+    ``save()`` therefore dispatches a device-side ``x.copy()`` of every leaf
+    first: the copy is enqueued on the device stream *before* the next step
+    can reuse the buffer, so it is dataflow-ordered against donation and
+    never blocks the host on the device. The snapshot then goes to a single
+    background thread that performs the (blocking) device→host transfer and
+    the ``np.savez`` disk write.
+
+    At most ``max_pending`` snapshots are in flight; a further ``save()``
+    first waits on the oldest (bounded snapshot memory). ``wait()`` drains
+    the queue and re-raises any writer-thread exception.
+    """
+
+    def __init__(self, max_pending: int = 2):
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="ckpt-writer")
+        self._pending: collections.deque = collections.deque()
+        self._max_pending = max(1, max_pending)
+
+    def save(self, path: str, tree: PyTree, step: int | None = None) -> None:
+        snap = jax.tree.map(
+            lambda x: x.copy() if hasattr(x, "copy") else x, tree)
+        while len(self._pending) >= self._max_pending:
+            self._pending.popleft().result()
+        self._pending.append(self._pool.submit(save, path, snap, step))
+
+    def wait(self) -> None:
+        while self._pending:
+            self._pending.popleft().result()
+
+    def close(self) -> None:
+        try:
+            self.wait()
+        finally:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "AsyncCheckpointWriter":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 def _base_key(stored: str) -> str:

@@ -89,7 +89,11 @@ def train(
     Host/device sync discipline: metrics are NOT fetched per step — device
     arrays accumulate and transfer in one batch per ``log_every`` window
     (plus checkpoint/final boundaries), so step dispatch runs ahead of the
-    device instead of blocking five times per iteration.
+    device instead of blocking five times per iteration. Checkpoints follow
+    the same discipline: saves go through
+    :class:`~repro.train.checkpoint.AsyncCheckpointWriter` — a device-side
+    snapshot (safe against the donated state) handed to a background writer
+    thread — so the synchronous ``np.savez`` never stalls the loop.
     """
     # Donating the state makes the step in-place on HBM: the params / opt
     # buffers (and the gossip bus pack buffers) reuse the incoming allocation
@@ -117,24 +121,37 @@ def train(
         pending.clear()
         t_win = time.perf_counter()
 
+    writer = ckpt_lib.AsyncCheckpointWriter() if ckpt_path else None
     ctx = compat.set_mesh(raw_mesh) if raw_mesh is not None else _nullcontext()
-    with ctx:
-        for k in range(steps):
-            batch = next(it)
-            state, metrics = step_fn(state, batch)
-            pending.append(metrics)
-            if k % log_every == 0 or k == steps - 1:
-                flush()
-                if verbose:
-                    print(f"step {k:5d}  loss {hist.loss[-1]:.5f}  "
-                          f"E {hist.grad_energy[-1]:.3e}  Esp {hist.grad_spread[-1]:.3e}  "
-                          f"spread {hist.param_spread[-1]:.3e}")
-            if ckpt_path and ckpt_every and (k + 1) % ckpt_every == 0:
-                flush()
-                ckpt_lib.save(ckpt_path, state.params, step=k + 1)
-    flush()
-    if ckpt_path:
-        ckpt_lib.save(ckpt_path, state.params, step=steps)
+    try:
+        with ctx:
+            for k in range(steps):
+                batch = next(it)
+                state, metrics = step_fn(state, batch)
+                pending.append(metrics)
+                if k % log_every == 0 or k == steps - 1:
+                    flush()
+                    if verbose:
+                        print(f"step {k:5d}  loss {hist.loss[-1]:.5f}  "
+                              f"E {hist.grad_energy[-1]:.3e}  Esp {hist.grad_spread[-1]:.3e}  "
+                              f"spread {hist.param_spread[-1]:.3e}")
+                if ckpt_path and ckpt_every and (k + 1) % ckpt_every == 0:
+                    flush()
+                    writer.save(ckpt_path, state.params, step=k + 1)
+        flush()
+        if ckpt_path:
+            writer.save(ckpt_path, state.params, step=steps)
+        if writer is not None:
+            writer.close()        # surfaces background write errors
+    except BaseException:
+        # the loop is already failing: drain the writer but don't let a
+        # secondary checkpoint-write error mask the real exception
+        if writer is not None:
+            try:
+                writer.close()
+            except Exception:
+                pass
+        raise
     return state, hist
 
 

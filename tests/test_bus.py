@@ -21,7 +21,8 @@ from repro.optim import momentum_sgd, sgd
 KEY = jax.random.PRNGKey(0)
 
 # Kernel tiles kept small so interpret-mode tests stay fast on CPU.
-BLK = dict(block_r=32, block_c=128)
+BLK = dict(block_r=32, block_c=128)   # mix_bus: kernel tile caps
+PLAN = dict(block_r=32)               # plan_layout: layout fixes cols to LANE
 
 
 def _tree(M, seed=0, dtypes=(jnp.float32,)):
@@ -49,7 +50,7 @@ def test_pack_unpack_roundtrip(lead_ndim, dtypes):
     tree = _tree(4, dtypes=dtypes)
     if lead_ndim == 0:  # strip the worker dim: per-worker view
         tree = jax.tree.map(lambda x: x[0], tree)
-    layout = bus.plan_layout(tree, lead_ndim=lead_ndim, **BLK)
+    layout = bus.plan_layout(tree, lead_ndim=lead_ndim, **PLAN)
     bufs = bus.pack(tree, layout, lead_ndim=lead_ndim)
     assert len(bufs) == len(set(jnp.dtype(d) for d in dtypes))
     back = bus.unpack(bufs, layout, lead_ndim=lead_ndim)
@@ -61,19 +62,23 @@ def test_pack_unpack_roundtrip(lead_ndim, dtypes):
 
 def test_layout_is_cached_and_padded_to_tiles():
     tree = _tree(4)
-    l1 = bus.plan_layout(tree, **BLK)
-    l2 = bus.plan_layout(jax.tree.map(lambda x: x * 2, tree), **BLK)
+    l1 = bus.plan_layout(tree, **PLAN)
+    l2 = bus.plan_layout(jax.tree.map(lambda x: x * 2, tree), **PLAN)
     assert l1 is l2  # same structure/shapes/dtypes → cache hit
     M = 4  # lead_ndim=1 layout counts per-worker (trailing) elements
     assert l1.payload_elements() == sum(x.size // M for x in jax.tree.leaves(tree))
     for g in l1.groups:
-        assert g.rows % 32 == 0 and g.cols % 128 == 0
+        # layout v2: whole dtype-native sublane tiles (8 rows for fp32), one
+        # lane-tile-wide rows, remainder lane-padded — not a full 32-row block
+        sub = bus.sublane_rows(g.dtype)
+        assert g.rows % sub == 0 and g.cols == bus.LANE
         assert g.rows * g.cols >= g.n
+        assert g.rows * g.cols - g.n < sub * bus.LANE
 
 
 def test_pack_padding_is_zero():
     tree = {"x": jnp.ones((2, 5))}
-    layout = bus.plan_layout(tree, **BLK)
+    layout = bus.plan_layout(tree, **PLAN)
     (buf,) = bus.pack(tree, layout)
     flat = np.asarray(buf).reshape(2, -1)
     assert np.all(flat[:, :5] == 1.0) and np.all(flat[:, 5:] == 0.0)

@@ -155,3 +155,96 @@ def test_load_consensus_params_detects_stacked_and_flat(tmp_path):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Async (background) checkpoint writer
+# ---------------------------------------------------------------------------
+
+
+def test_async_writer_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.ones((5,), jnp.bfloat16)}
+    path = os.path.join(tmp_path, "async.npz")
+    with C.AsyncCheckpointWriter() as w:
+        w.save(path, tree, step=3)
+        w.wait()
+        back = C.restore(path, tree)
+    for k in tree:
+        assert np.array_equal(_bits(tree[k]), _bits(back[k])), k
+    assert C.latest_step(path) == 3
+
+
+def test_async_writer_propagates_write_errors(tmp_path):
+    w = C.AsyncCheckpointWriter()
+    w.save(os.path.join(tmp_path, "no", "such", "dir") + "\0bad", {"x": jnp.ones(2)})
+    with pytest.raises(Exception):
+        w.wait()
+    w.close()
+
+
+def test_in_flight_save_survives_donated_steps(tmp_path, monkeypatch):
+    """The ROADMAP §Metric-sync item: an in-flight save must neither block
+    the loop thread nor torn-read state the next (donated) step overwrites.
+
+    The disk write is gated on an event: save() must return with the gate
+    still closed (the loop thread never waits on np.savez), several donated
+    in-place steps then clobber the step-0 buffers, and only afterwards is
+    the write released — the checkpoint must still hold the step-0 values.
+    """
+    import threading
+
+    import jax
+
+    gate = threading.Event()
+    real_savez = np.savez
+
+    def gated_savez(path, **arrs):
+        assert gate.wait(timeout=60), "test gate never released"
+        real_savez(path, **arrs)
+
+    monkeypatch.setattr(C.np, "savez", gated_savez)
+
+    step = jax.jit(lambda p: jax.tree.map(lambda x: x + 1.0, p),
+                   donate_argnums=0)
+    params = {"w": jnp.zeros((64, 33), jnp.float32)}
+    path = os.path.join(tmp_path, "inflight.npz")
+    with C.AsyncCheckpointWriter() as w:
+        w.save(path, params, step=0)          # returns while gate is closed
+        assert not gate.is_set()
+        for _ in range(5):                     # donation reuses the buffers
+            params = step(params)
+        jax.block_until_ready(params)
+        gate.set()
+        w.wait()
+    back = C.restore(path, {"w": jnp.zeros((64, 33), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(back["w"]), 0.0)  # not 5.0
+    np.testing.assert_array_equal(np.asarray(params["w"]), 5.0)
+    assert C.latest_step(path) == 0
+
+
+def test_async_writer_bounds_pending_saves(tmp_path, monkeypatch):
+    """A third save waits on the oldest in-flight write (max_pending=2), so
+    snapshot memory stays bounded; order of completed files is preserved."""
+    import threading
+
+    gate = threading.Event()
+    real_savez = np.savez
+    written = []
+
+    def gated_savez(path, **arrs):
+        assert gate.wait(timeout=60)
+        written.append(os.path.basename(path))
+        real_savez(path, **arrs)
+
+    monkeypatch.setattr(C.np, "savez", gated_savez)
+    tree = {"x": jnp.ones(8)}
+    w = C.AsyncCheckpointWriter(max_pending=2)
+    w.save(os.path.join(tmp_path, "a.npz"), tree)
+    w.save(os.path.join(tmp_path, "b.npz"), tree)
+    release = threading.Timer(0.2, gate.set)   # 3rd save blocks until gate
+    release.start()
+    w.save(os.path.join(tmp_path, "c.npz"), tree)
+    assert gate.is_set()                        # i.e. save() had to drain
+    w.close()
+    assert written == ["a.npz", "b.npz", "c.npz"]
