@@ -1,6 +1,9 @@
 """Event-driven simulator benchmarks: engine event throughput (timing-only
-and with real JAX train steps) plus the virtual-time speedup of ring vs
-clique under the heavy-tail straggler scenario. Writes results/bench/sim.json.
+and with real JAX train steps), the virtual-time speedup of ring vs clique
+under the heavy-tail straggler scenario, and the mesh-aware two-link-class
+lane (hier topology, `hier` protocol) whose DCI byte accounting is asserted
+against the bus layout's ``BusLayout.padded_bytes`` prediction. Writes
+results/bench/sim.json + results/bench/sim_linkclass.json.
 """
 from __future__ import annotations
 
@@ -38,6 +41,51 @@ def _real_training(topo, rounds: int, protocol: str = "sync", seed: int = 0):
             "final_loss": float(losses[-1])}
 
 
+def _link_class_lane(quick: bool, seed: int = 0) -> dict:
+    """Mesh smoke: small hier scenario on the mesh-aware engine.
+
+    Asserts the engine's per-message DCI/ICI byte accounting uses EXACTLY
+    the per-device payload the gossip bus would ship for this parameter
+    tree (`BusLayout.padded_bytes` — the layout-v2 plan), i.e. virtual time
+    charges the real wire bytes. CI fails on any drift between the sim's
+    cost model and the bus layout."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.bus import plan_layout
+
+    M, pods = (8, 2) if quick else (16, 4)
+    topo = T.hier(pods, M // pods)
+    problem = common.problem_linear(S=256, n=16, seed=seed)
+    scen = scenarios.datacenter("spark", dci_latency=8.0, ici_latency=0.02,
+                                seed=7)
+    t0 = time.perf_counter()
+    r = common.run_sim(problem, topo, rounds=30 if quick else 80, lr=0.1,
+                       protocol="hier", scenario=scen, eval_every=0,
+                       mesh="topology")
+    dt = time.perf_counter() - t0
+    acct = r.trace.link_accounting()
+    payload = r.trace.meta["mesh"]["payload_bytes"]
+    params0 = jax.tree.map(jnp.asarray, problem[2])
+    expect = plan_layout(params0, lead_ndim=0).padded_bytes()
+    assert payload == expect, (
+        "sim payload drifted from the bus layout prediction", payload, expect)
+    for cls in ("ici", "dci"):
+        assert acct[cls]["bytes"] == acct[cls]["messages"] * payload, \
+            (cls, acct, payload)
+    assert acct["dci"]["time"] >= 8.0 * acct["dci"]["messages"]
+    return {"bench": "sim", "topology": topo.name, "mode": "train-hier-mesh",
+            "events": len(r.trace), "wall_s": dt,
+            "events_per_sec": len(r.trace) / dt,
+            "virtual_time": float(r.virtual_time),
+            "payload_bytes": payload,
+            "dci_messages": acct["dci"]["messages"],
+            "dci_bytes": acct["dci"]["bytes"],
+            "ici_bytes": acct["ici"]["bytes"],
+            "dci_time": acct["dci"]["time"],
+            "ici_time": acct["ici"]["time"]}
+
+
 def run(quick: bool = False) -> list[dict]:
     M = 4 if quick else 16
     timing_rounds = 100 if quick else 1000
@@ -57,5 +105,8 @@ def run(quick: bool = False) -> list[dict]:
         rows.append({"bench": "sim", "topology": f"ring-{M}",
                      "mode": f"train-{proto}", **row})
 
+    link_row = _link_class_lane(quick)
+    rows.append(link_row)
+    common.save_json("sim_linkclass", [link_row])
     common.save_json("sim", rows)
     return rows

@@ -24,9 +24,11 @@ The bus instead:
      the model axis pack their local 1/k tensor shard; leaves whose axes do
      NOT divide by k (GQA kv-projections at k=16) are **row-split**: shard s
      packs elements ``[s·⌈n/k⌉, (s+1)·⌈n/k⌉)`` of the flat leaf, so nothing
-     rides the inter-worker collectives replicated. Row-split leaves are
-     re-assembled after the mix by one intra-worker (fast ICI) all-gather
-     per dtype group over the model axis.
+     rides the inter-worker collectives replicated. Row-split leaves sit at
+     the HEAD of each group's payload and are re-assembled after the mix by
+     one intra-worker (fast ICI) all-gather per dtype group over the model
+     axis — issued off the head chunks of the ``nchunks`` pipeline, so the
+     gather overlaps the remaining chunks' fused VMEM passes.
 
 2. runs consensus as **one bulk collective per non-identity permutation** of
    the Birkhoff decomposition ``A = Σ_p w_p·P_p`` — collective count per
@@ -99,12 +101,13 @@ class _Group:
     """Leaves of one dtype packed into one (lead..., R, C) buffer."""
 
     dtype: jnp.dtype
-    slots: tuple[_LeafSlot, ...]   # payload order (tensor-sharded first)
+    slots: tuple[_LeafSlot, ...]   # payload order (row-split first)
     n: int                         # per-shard payload elements (un-padded)
     rows: int                      # R per shard — multiple of sublane(dtype)
     cols: int                      # C — one lane tile (LANE)
     block_r: int                   # tile rows actually used by the kernel
     split_off: int                 # payload offset where row-split slots begin
+    split_end: int = 0             # payload offset where row-split slots end
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,17 +227,20 @@ def plan_layout(tree: PyTree, *, lead_ndim: int = 1,
     groups = []
     for dt, ids in by_dtype.items():
         sub = sublane_rows(dt)
-        # pass 2 (leaf → row-range assignment). Tensor-sharded leaves first
-        # so the row-split region is one contiguous tail span per group (one
-        # intra-worker all-gather re-assembles it after the mix).
-        ids = sorted(ids, key=lambda i: (not flags[i],))
-        slots, off, split_off = [], 0, None
+        # pass 2 (leaf → row-range assignment). Row-split leaves FIRST so
+        # the span the post-mix intra-worker all-gather needs is a contiguous
+        # HEAD span per group: the gather depends only on the buffer's first
+        # chunks and overlaps the later chunks' fused VMEM passes in the
+        # nchunks pipeline (`_mix_group_chunked`).
+        ids = sorted(ids, key=lambda i: (flags[i],))
+        slots, off, split_lo, split_hi = [], 0, None, None
         for i in ids:
             size = int(np.prod(shapes[i], dtype=np.int64))
             whole = flags[i] or size == 0   # nothing to row-split in 0 elems
             chunk = size if whole else -(-size // shards)
-            if not whole and split_off is None:
-                split_off = off
+            if not whole:
+                split_lo = off if split_lo is None else split_lo
+                split_hi = off + chunk
             slots.append(_LeafSlot(leaf_id=i, size=size, chunk=chunk,
                                    offset=off, sharded=whole))
             off += chunk
@@ -246,7 +252,8 @@ def plan_layout(tree: PyTree, *, lead_ndim: int = 1,
         groups.append(_Group(dtype=dt, slots=tuple(slots), n=n, rows=rows,
                              cols=LANE,
                              block_r=_pick_block_r(rows, block_r, sub),
-                             split_off=n if split_off is None else split_off))
+                             split_off=0 if split_lo is None else split_lo,
+                             split_end=0 if split_hi is None else split_hi))
     layout = BusLayout(treedef=treedef, shapes=shapes, groups=tuple(groups),
                        shards=shards)
     _LAYOUT_CACHE[key] = layout
@@ -305,11 +312,11 @@ def unpack(bufs: Sequence[jax.Array], layout: BusLayout, *,
         lead = buf.shape[:lead_ndim]
         flat = buf.reshape(lead + (-1,))
         gathered = None
-        if layout.shards > 1 and g.split_off < g.n:
+        if layout.shards > 1 and g.split_off < g.split_end:
             assert gather is not None, "row-split leaves need a gather fn"
             assert lead_ndim == 0, "row-split unpack is per-shard (lead_ndim=0)"
-            span = jax.lax.slice_in_dim(flat, g.split_off, g.n, axis=0)
-            gathered = gather(span)            # (shards, n - split_off)
+            span = jax.lax.slice_in_dim(flat, g.split_off, g.split_end, axis=0)
+            gathered = gather(span)            # (shards, split span)
         for slot in g.slots:
             if slot.sharded or layout.shards == 1:
                 piece = jax.lax.slice_in_dim(
@@ -364,7 +371,8 @@ def _chunk_starts(rows: int, block_r: int, nchunks: int) -> list[tuple[int, int]
 
 
 def _mix_group_chunked(x2, u2, rows, block_r, block_c, weights, eta, pairs,
-                       axes, nchunks, interpret, donate):
+                       axes, nchunks, interpret, donate, *,
+                       gather=None, span=None):
     """Mix one (rows, cols) buffer: pipelined bulk ppermutes + fused kernel.
 
     With ``nchunks > 1`` the buffer is software-pipelined: the permutes for
@@ -372,6 +380,17 @@ def _mix_group_chunked(x2, u2, rows, block_r, block_c, weights, eta, pairs,
     collectives (TPU collective-permute-start/-done) overlap the previous
     chunk's VMEM pass — the classic double-buffered pattern, two chunks of
     neighbor data live at a time.
+
+    ``gather``/``span``: the model-sharded path's post-mix re-assembly of
+    row-split leaves folds into the same pipeline. ``span`` is the
+    (start, end) element range of the row-split payload — a HEAD span since
+    layout v2 packs row-split leaves first — and ``gather`` maps it to the
+    (shards, span) stack (one ``all_gather`` over the model axis). The
+    gather is issued as soon as the chunks covering the span have run, so
+    its operand depends only on the EARLY chunks: the intra-worker ICI
+    gather overlaps the remaining chunks' fused VMEM passes instead of
+    waiting for the whole buffer. Returns (mixed, gathered) when a gather is
+    requested, else just the mixed buffer.
     """
     chunks = _chunk_starts(rows, min(block_r, rows), nchunks)
 
@@ -380,8 +399,13 @@ def _mix_group_chunked(x2, u2, rows, block_r, block_c, weights, eta, pairs,
         x_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
         return jnp.stack([jax.lax.ppermute(x_c, axes, pr) for pr in pairs])
 
+    def flat_prefix(pieces):
+        head = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+        return head.reshape(-1)
+
     nbrs = permute(0)
-    pieces = []
+    pieces, gathered, done = [], None, 0
+    cols = x2.shape[-1]
     for c, (start, size) in enumerate(chunks):
         nxt = permute(c + 1) if c + 1 < len(chunks) else None
         w_c = jax.lax.slice_in_dim(x2, start, start + size, axis=0)
@@ -391,8 +415,13 @@ def _mix_group_chunked(x2, u2, rows, block_r, block_c, weights, eta, pairs,
             w_c, nbrs, weights, u_c, eta,
             block_r=min(block_r, size), block_c=block_c,
             interpret=interpret, donate=donate))
+        done += size * cols
+        if gather is not None and gathered is None and done >= span[1]:
+            gathered = gather(jax.lax.slice_in_dim(
+                flat_prefix(pieces), span[0], span[1], axis=0))
         nbrs = nxt
-    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+    return out if gather is None else (out, gathered)
 
 
 def _perm_pairs(spec, perms):
@@ -476,16 +505,28 @@ def _mix_pytree_model_sharded(params, updates, spec, mesh, param_specs,
         bufs = pack(local, layout, lead_ndim=0, shard_index=s)
         upd_bufs = None if u_loc is None else pack(u_loc, layout, lead_ndim=0,
                                                    shard_index=s)
-        outs = []
+        ici_gather = lambda x: jax.lax.all_gather(x, spec.model_axis)
+        outs, gathered = [], []
         for gi, g in enumerate(layout.groups):
             u2 = None if upd_bufs is None else upd_bufs[gi]
-            outs.append(_mix_group_chunked(
-                bufs[gi], u2, g.rows, g.block_r, block_c, weights, eta,
-                pairs, axes, nchunks, interpret, donate))
-        gather = None
-        if k > 1:
-            gather = lambda x: jax.lax.all_gather(x, spec.model_axis)
-        mixed = unpack(outs, layout, lead_ndim=0, gather=gather)
+            if k > 1 and g.split_off < g.split_end:
+                # fold the row-split re-assembly gather into the chunk
+                # pipeline: it runs off the head chunks, overlapping the
+                # remaining chunks' fused passes (still ONE gather per group)
+                out, gat = _mix_group_chunked(
+                    bufs[gi], u2, g.rows, g.block_r, block_c, weights, eta,
+                    pairs, axes, nchunks, interpret, donate,
+                    gather=ici_gather, span=(g.split_off, g.split_end))
+                gathered.append(gat)
+            else:
+                out = _mix_group_chunked(
+                    bufs[gi], u2, g.rows, g.block_r, block_c, weights, eta,
+                    pairs, axes, nchunks, interpret, donate)
+            outs.append(out)
+        gat_iter = iter(gathered)
+        mixed = unpack(outs, layout, lead_ndim=0,
+                       gather=(lambda _span: next(gat_iter)) if gathered
+                       else None)
         return jax.tree.map(lambda x: x[None], mixed)
 
     if updates is None:

@@ -43,7 +43,8 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.topology import Topology
 
-__all__ = ["GossipSpec", "mix_pytree", "mix_reference", "make_mixer"]
+__all__ = ["GossipSpec", "mix_pytree", "mix_reference", "make_mixer",
+           "hierarchical_mix", "split_hierarchical"]
 
 PyTree = Any
 
@@ -243,9 +244,31 @@ def mix_pytree_time_varying(params: PyTree, spec: GossipSpec, step: jax.Array,
 # ---------------------------------------------------------------------------
 
 
+def split_hierarchical(spec: GossipSpec) -> tuple[GossipSpec, GossipSpec]:
+    """Factor a spec on a kronecker/`hier` topology into its two stages.
+
+    Returns ``(intra, inter)`` specs on the same M workers —
+    ``intra.topology.A = I ⊗ A_inner`` (pod-local, every edge ICI) and
+    ``inter.topology.A = A_outer ⊗ I`` (cross-pod, every edge DCI) — such
+    that :func:`hierarchical_mix` with them equals one mix with the original
+    Kronecker matrix. These are also exactly the two stages the simulator's
+    `hier` protocol (``repro.sim.protocols.HierGossip``) overlaps: the intra
+    stage is a local barrier on fast ICI links, the inter stage rides DCI
+    messages that stay in flight while the pod keeps mixing."""
+    from repro.core.topology import split_kronecker
+
+    intra_t, inter_t = split_kronecker(spec.topology)
+    return (dataclasses.replace(spec, topology=intra_t),
+            dataclasses.replace(spec, topology=inter_t))
+
+
 def hierarchical_mix(params: PyTree, intra: GossipSpec, inter: GossipSpec, mesh=None) -> PyTree:
     """Two-level gossip: dense/cheap mixing inside a pod (fast ICI), sparse
     mixing across pods (slow DCI). Equivalent consensus matrix is the
     Kronecker product A_inter ⊗ A_intra — still doubly stochastic & normal.
+    :func:`split_hierarchical` factors a kronecker-topology spec into the
+    two stage specs; the wall-clock behaviour of overlapping them (intra
+    barrier + in-flight DCI) is simulated by the `hier` protocol in
+    ``repro.sim.protocols``.
     """
     return mix_pytree(mix_pytree(params, intra, mesh), inter, mesh)

@@ -27,6 +27,10 @@ __all__ = [
     "star",
     "random_regular",
     "expander",
+    "kronecker",
+    "hier",
+    "split_kronecker",
+    "edge_classes",
     "one_peer_exponential",
     "metropolis_weights",
     "uniform_weights",
@@ -58,17 +62,29 @@ class Topology:
       circulant_offsets: if the graph is circulant (node i listens to
          i+δ mod M for δ in offsets, δ=0 is the self loop), the sorted offset
          tuple; else None.  Circulant ⇒ A is normal automatically.
+      group_of: optional per-node group id (pod assignment). Hierarchical
+         builders (:func:`kronecker`, :func:`hier`) set it so edges can be
+         classified into intra-group (ICI) vs cross-group (DCI) link classes
+         (:func:`edge_classes`) — the cost split the mesh-aware simulator
+         charges. None ⇒ no grouping metadata.
     """
 
     name: str
     A: np.ndarray
     directed: bool = False
     circulant_offsets: tuple[int, ...] | None = None
+    group_of: tuple[int, ...] | None = None
 
     def __post_init__(self):
         A = np.asarray(self.A, dtype=np.float64)
         object.__setattr__(self, "A", A)
         _check_consensus_matrix(A)
+        if self.group_of is not None:
+            g = tuple(int(x) for x in self.group_of)
+            if len(g) != A.shape[0]:
+                raise ValueError(
+                    f"group_of must assign all {A.shape[0]} nodes, got {len(g)}")
+            object.__setattr__(self, "group_of", g)
 
     @property
     def M(self) -> int:
@@ -273,11 +289,90 @@ def kronecker(outer: Topology, inner: Topology, name: str | None = None) -> Topo
     A_outer. Kronecker products of doubly-stochastic normal matrices are
     doubly stochastic and normal; λ2(A⊗B) = max over non-unit eigenvalue
     products. Matches the physical pod/ICI hierarchy: intra-pod edges are
-    cheap, the inter-pod edge count is |E_outer| per parameter shard."""
+    cheap, the inter-pod edge count is |E_outer| per parameter shard.
+
+    Node (p, i) is flattened to index ``p·M_inner + i``; ``group_of`` records
+    the pod id p so :func:`edge_classes` can partition the edges into
+    intra-pod (ICI) vs cross-pod (DCI) link classes."""
     A = np.kron(outer.A, inner.A)
+    group_of = tuple(int(p) for p in np.repeat(np.arange(outer.M), inner.M))
     return Topology(
         name=name or f"kron({outer.name},{inner.name})", A=A,
-        directed=outer.directed or inner.directed)
+        directed=outer.directed or inner.directed, group_of=group_of)
+
+
+def hier(n_pods: int, pod_size: int, *, outer: str = "ring",
+         inner: str = "clique") -> Topology:
+    """The `hier` topology: Kronecker pod⊗ring hierarchy for multi-pod runs.
+
+    Default shape is a ring OVER pods (the only edges that touch slow DCI
+    links — 2 cross-pod permutation classes) ⊗ a clique WITHIN each pod
+    (dense mixing on fast ICI). ``outer``/``inner`` pick any named builder
+    from :data:`BY_NAME` — e.g. ``hier(4, 8, inner='ring')`` for pod⊗ring
+    with sparse intra-pod mixing."""
+    return kronecker(make(outer, n_pods), make(inner, pod_size),
+                     name=f"hier-{outer}{n_pods}x{inner}{pod_size}")
+
+
+def split_kronecker(topo: Topology) -> tuple[Topology, Topology]:
+    """Factor a :func:`kronecker` topology into its two M-node mixing stages.
+
+    Returns ``(intra, inter)`` topologies on the SAME M nodes:
+    ``intra.A = I_P ⊗ A_inner`` (pod-local mixing — every edge intra-group)
+    and ``inter.A = A_outer ⊗ I_s`` (cross-pod mixing — every non-self edge
+    crosses groups), with ``inter.A @ intra.A == topo.A``. These are the two
+    stages ``core/gossip.hierarchical_mix`` runs back-to-back and the
+    simulator's `hier` protocol overlaps (intra barrier, inter in flight).
+    Requires ``topo.group_of`` with equal-size contiguous groups."""
+    if topo.group_of is None:
+        raise ValueError(f"{topo.name} has no group metadata (not a kronecker)")
+    g = np.asarray(topo.group_of)
+    P_ = int(g.max()) + 1
+    s = topo.M // P_
+    if topo.M != P_ * s or not np.array_equal(g, np.repeat(np.arange(P_), s)):
+        raise ValueError("split_kronecker needs equal contiguous groups")
+    # recover the factors: block (p, q) is A_out[p, q]·A_in, and A_in's
+    # columns sum to 1, so each block's total weight is s·A_out[p, q]
+    blocks = topo.A.reshape(P_, s, P_, s).transpose(0, 2, 1, 3)
+    A_outer = blocks.sum((2, 3)) / s
+    p0, q0 = np.unravel_index(int(np.argmax(A_outer)), A_outer.shape)
+    A_inner = blocks[p0, q0] / A_outer[p0, q0]
+    if not np.allclose(np.kron(A_outer, A_inner), topo.A, atol=1e-9):
+        raise ValueError(f"{topo.name} is not a kronecker of its blocks")
+    intra = Topology(name=f"{topo.name}-intra", A=np.kron(np.eye(P_), A_inner),
+                     directed=topo.directed, group_of=topo.group_of)
+    inter = Topology(name=f"{topo.name}-inter", A=np.kron(A_outer, np.eye(s)),
+                     directed=topo.directed, group_of=topo.group_of)
+    return intra, inter
+
+
+def edge_classes(topo: Topology, group_of: Sequence[int] | None = None
+                 ) -> dict[str, list[tuple[int, int]]]:
+    """Partition the topology's directed edges into ICI vs DCI link classes.
+
+    Every nonzero off-diagonal ``A[i, j]`` is one directed gossip edge
+    (i sends to j). Edges within a group ride fast intra-pod links (class
+    ``'ici'``); edges between groups ride the slow cross-pod links (class
+    ``'dci'``). ``group_of`` defaults to the topology's own metadata; with no
+    grouping at all every edge is ICI (the meshless/flat world).
+
+    Returns ``{'ici': [(src, dst), ...], 'dci': [...]}`` with deterministic
+    (row-major) edge order — the classification the mesh-aware simulator
+    charges per-class latency/bandwidth against.
+    """
+    g = group_of if group_of is not None else topo.group_of
+    if g is None:
+        g = np.zeros(topo.M, dtype=int)
+    g = np.asarray(g, dtype=int)
+    if len(g) != topo.M:
+        raise ValueError(f"group_of covers {len(g)} nodes, topology has {topo.M}")
+    out: dict[str, list[tuple[int, int]]] = {"ici": [], "dci": []}
+    ii, jj = np.nonzero(topo.A)
+    for i, j in zip(ii.tolist(), jj.tolist()):
+        if i == j:
+            continue
+        out["dci" if g[i] != g[j] else "ici"].append((i, j))
+    return out
 
 
 def one_peer_exponential(M: int, k: int) -> Topology:

@@ -19,6 +19,7 @@ import dataclasses
 from typing import Any
 
 import jax
+import numpy as np
 
 from repro import compat
 
@@ -104,6 +105,61 @@ class WorkerMesh:
         """
         from repro.core.bus import sublane_rows
         return sublane_rows(dtype) * self.model_factor
+
+    # -- simulator mirror ---------------------------------------------------
+    def sim_payload_bytes(self, params_template, param_specs=None, *,
+                          lead_ndim: int = 0) -> int:
+        """Per-device bytes of ONE bulk gossip collective on this mesh.
+
+        Exactly ``BusLayout.padded_bytes`` of the layout-v2 plan for the
+        local shard view: tensor-sharded leaves contribute their 1/k shard,
+        every other leaf its ``⌈n/k⌉`` row-split chunk, rows padded to whole
+        sublane tiles per shard. This is the payload the mesh-aware
+        simulator charges per message, so virtual time reflects the real
+        wire bytes layout v2 ships. ``params_template`` is a per-worker
+        pytree (abstract ``ShapeDtypeStruct`` leaves work); ``lead_ndim``
+        leading dims (a stacked worker dim) are ignored.
+        """
+        from repro.core.bus import plan_layout, sharded_leaf_flags
+
+        k = self.model_factor
+        leaves, treedef = jax.tree_util.tree_flatten(params_template)
+        sizes = [int(np.prod(x.shape[lead_ndim:], dtype=np.int64))
+                 for x in leaves]
+        if k <= 1:
+            flags = (True,) * len(leaves)
+        elif param_specs is None:
+            flags = (False,) * len(leaves)   # row-split everything
+        else:
+            flags = sharded_leaf_flags(param_specs, self.model_axis,
+                                       treedef=treedef)
+        local = []
+        for x, n, f in zip(leaves, sizes, flags):
+            if f and n % k:
+                raise ValueError(
+                    f"leaf of {n} elements marked tensor-sharded but does "
+                    f"not divide the model factor {k}")
+            local.append(jax.ShapeDtypeStruct((n // k if f else n,), x.dtype))
+        layout = plan_layout(treedef.unflatten(local), lead_ndim=0, shards=k,
+                             leaf_sharded=flags)
+        return layout.padded_bytes()
+
+    def sim_spec(self, *, params_template=None, param_specs=None):
+        """Mirror into a :class:`repro.sim.scenarios.MeshSpec`: worker group
+        = coordinate along the leading worker axis (the 'pod' axis on
+        multi-pod meshes — single-axis meshes are one group), payload bytes
+        from :meth:`sim_payload_bytes` when a template is given."""
+        from repro.sim.scenarios import MeshSpec
+
+        sizes = [int(self.mesh.shape[a]) for a in self.worker_axes]
+        n = int(np.prod(sizes))
+        # one pod when there is no pod axis; else group by the leading axis
+        inner = n if len(sizes) == 1 else n // sizes[0]
+        payload = 0
+        if params_template is not None:
+            payload = self.sim_payload_bytes(params_template, param_specs)
+        return MeshSpec(group_of=tuple(i // inner for i in range(n)),
+                        payload_bytes=payload, name=self.describe())
 
     # -- mesh passthrough ---------------------------------------------------
     @property

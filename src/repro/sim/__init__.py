@@ -5,10 +5,15 @@ statement about schedules, not values. This subsystem closes the gap between
 the repo's throughput model and its optimizer: a deterministic discrete-event
 :class:`~repro.sim.engine.Engine` advances per-worker virtual clocks while
 pluggable :mod:`~repro.sim.protocols` (synchronous local-barrier gossip,
-AD-PSGD-style asynchronous pairwise averaging, stale/delayed gossip) execute
-*real* JAX train steps, so loss-vs-virtual-time curves come from actual
-optimization, under composable :mod:`~repro.sim.scenarios` (straggler
-distributions, link delays, node churn, topology switches).
+AD-PSGD-style asynchronous pairwise averaging, stale/delayed gossip, and
+hierarchical pod gossip) execute *real* JAX train steps, so
+loss-vs-virtual-time curves come from actual optimization, under composable
+:mod:`~repro.sim.scenarios` (straggler distributions, link delays, node
+churn, topology switches). A mesh-aware engine (pass a
+:class:`~repro.sim.scenarios.MeshSpec` or a WorkerMesh) additionally
+classifies every gossip edge intra-group (ICI) vs cross-group (DCI) and
+charges per-class latency/bandwidth against the exact per-device payload
+the gossip bus ships (``BusLayout.padded_bytes``).
 
 Entry points: ``repro.train.loop.run_simulated`` (one-call driver) or the
 Engine/Protocol API directly. ``repro.core.straggler.simulate`` is now a thin
@@ -20,17 +25,18 @@ from repro.sim.protocols import (
     PROTOCOLS,
     AsyncPairwise,
     BatchCache,
+    HierGossip,
     StaleGossip,
     SyncGossip,
     TrainExecutor,
 )
-from repro.sim.scenarios import DISTRIBUTIONS, Scenario
+from repro.sim.scenarios import DISTRIBUTIONS, LinkCost, MeshSpec, Scenario
 from repro.sim.trace import Trace, TraceRecord, time_to_target
 
 __all__ = [
     "engine", "protocols", "scenarios", "trace",
     "Engine", "Event", "Trace", "TraceRecord", "time_to_target",
-    "Scenario", "DISTRIBUTIONS", "PROTOCOLS",
-    "SyncGossip", "AsyncPairwise", "StaleGossip",
+    "Scenario", "DISTRIBUTIONS", "PROTOCOLS", "LinkCost", "MeshSpec",
+    "SyncGossip", "AsyncPairwise", "StaleGossip", "HierGossip",
     "TrainExecutor", "BatchCache",
 ]

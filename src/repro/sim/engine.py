@@ -47,15 +47,49 @@ class Event:
     round: int = 0       # iteration index the event concerns
     epoch: int = 0       # liveness epoch of `worker` at schedule time
     payload: Any = None  # protocol data (e.g. a params snapshot); not traced
+    link_class: str | None = None  # 'ici'|'dci' (mesh-aware ARRIVAL)
+    nbytes: int = 0      # payload bytes the link model charged
+    wire_time: float = 0.0  # delay the link model charged
 
 
 class Engine:
-    """Event queue + virtual clocks; see module docstring."""
+    """Event queue + virtual clocks; see module docstring.
 
-    def __init__(self, topology: Topology, scenario: scen_lib.Scenario | None = None):
+    ``mesh`` (a :class:`~repro.sim.scenarios.MeshSpec`, or a
+    :class:`~repro.launch.mesh.WorkerMesh` which is mirrored into one) makes
+    the engine *mesh-aware*: every gossip edge is classified intra-group
+    (ICI) vs cross-group (DCI) — the partition ``core/topology.edge_classes``
+    defines — and, when the scenario carries per-class
+    :class:`~repro.sim.scenarios.LinkCost` models, message delays charge that
+    class's latency + payload/bandwidth using the mesh's per-device payload
+    bytes (``BusLayout.padded_bytes``). Arrivals are annotated with
+    (class, bytes, wire time) in the trace either way.
+    """
+
+    def __init__(self, topology: Topology, scenario: scen_lib.Scenario | None = None,
+                 mesh: "scen_lib.MeshSpec | None" = None):
         self.topology = topology
         self.scenario = scenario or scen_lib.Scenario()
         self.M = topology.M
+        self.mesh = scen_lib.MeshSpec.ensure(mesh, topology)
+        if self.mesh is not None and self.mesh.M != self.M:
+            raise ValueError(f"mesh covers {self.mesh.M} workers, "
+                             f"topology has {self.M}")
+        if self.scenario.link_classes is not None and self.mesh is None:
+            raise ValueError(
+                "scenario has per-class link costs but the engine got no "
+                "mesh — pass a MeshSpec/WorkerMesh to classify edges")
+        if self.scenario.link_classes is not None and \
+                not self.mesh.payload_bytes and \
+                any(np.isfinite(lc.bytes_per_time)
+                    for lc in self.scenario.link_classes.values()):
+            raise ValueError(
+                "scenario charges payload/bandwidth but mesh.payload_bytes "
+                "is 0 — build the MeshSpec with payload_bytes (e.g. "
+                "WorkerMesh.sim_spec(params_template=...)) or go through "
+                "run_simulated, which fills it from the bus layout plan")
+        self._group = None if self.mesh is None else \
+            np.asarray(self.mesh.group_of)
         ss = np.random.SeedSequence(self.scenario.seed)
         children = ss.spawn(self.M + 1)
         self.rngs = [np.random.default_rng(s) for s in children[: self.M]]
@@ -71,14 +105,29 @@ class Engine:
     # -- scheduling -------------------------------------------------------
 
     def schedule(self, time: float, kind: str, worker: int, *, src: int = -1,
-                 round: int = 0, payload: Any = None) -> Event:
+                 round: int = 0, payload: Any = None,
+                 link_class: str | None = None, nbytes: int = 0,
+                 wire_time: float = 0.0) -> Event:
         if time < self.clock:
             raise ValueError(f"cannot schedule into the past ({time} < {self.clock})")
         epoch = int(self.epoch[worker]) if worker >= 0 else 0
         ev = Event(time, next(self._seq), kind, worker, src=src, round=round,
-                   epoch=epoch, payload=payload)
+                   epoch=epoch, payload=payload, link_class=link_class,
+                   nbytes=nbytes, wire_time=wire_time)
         heapq.heappush(self._heap, (ev.time, ev.seq, ev))
         return ev
+
+    def send(self, src: int, dst: int, *, round: int = 0,
+             payload: Any = None) -> Event:
+        """Ship one gossip message src→dst: draw the link delay (per-class
+        on a mesh-aware engine) and schedule the ARRIVAL, annotated with the
+        link class + payload bytes the cost model charged."""
+        d = self.link_delay(src, dst)
+        return self.schedule(
+            self.clock + d, ARRIVAL, dst, src=src, round=round,
+            payload=payload, link_class=self.link_class(src, dst),
+            nbytes=self.mesh.payload_bytes if self.mesh is not None else 0,
+            wire_time=d)
 
     def _preload_environment_events(self) -> None:
         for t, w, kind in self.scenario.churn:
@@ -96,8 +145,24 @@ class Engine:
             raise ValueError(f"compute duration must be positive, got {d}")
         return d
 
+    def link_class(self, src: int, dst: int) -> str | None:
+        """'ici' (same group) | 'dci' (cross-group); None on meshless runs.
+
+        Classification depends only on the worker→group assignment, so it is
+        stable across topology SWITCHes (which edges exist changes; which
+        *pairs* are cross-pod does not)."""
+        if self._group is None:
+            return None
+        return scen_lib.DCI if self._group[src] != self._group[dst] \
+            else scen_lib.ICI
+
     def link_delay(self, src: int, dst: int) -> float:
-        d = float(self.scenario.link_delay(self.rngs[src], src, dst))
+        classes = self.scenario.link_classes
+        if classes is not None:
+            cost = classes[self.link_class(src, dst)]
+            d = float(cost.delay(self.rngs[src], self.mesh.payload_bytes))
+        else:
+            d = float(self.scenario.link_delay(self.rngs[src], src, dst))
         if d < 0.0:
             raise ValueError(f"link delay must be >= 0, got {d}")
         return d
@@ -146,7 +211,9 @@ class Engine:
             info = protocol.handle(ev) or {}
             self.trace.record(trace_lib.TraceRecord(
                 seq=ev.seq, t=ev.time, kind=ev.kind, worker=ev.worker,
-                src=ev.src, round=ev.round, loss=info.get("loss")))
+                src=ev.src, round=ev.round, loss=info.get("loss"),
+                link_class=ev.link_class, nbytes=ev.nbytes,
+                wire_time=ev.wire_time))
             processed += 1
         self.trace.meta.update({
             "scenario": self.scenario.describe(),
@@ -155,4 +222,6 @@ class Engine:
             "events": processed,
             "final_time": self.clock,
         })
+        if self.mesh is not None:
+            self.trace.meta["mesh"] = self.mesh.describe()
         return self.trace

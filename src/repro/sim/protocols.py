@@ -20,6 +20,10 @@ All three protocols speak the same engine API (``bind`` / ``start`` /
 * :class:`StaleGossip` — delayed gossip: worker j mixes whatever neighbor
   snapshots have *arrived* by its clock (weights renormalized over the
   available set), then broadcasts its new estimate.
+* :class:`HierGossip` — two-level pod gossip (SGP-style overlap): exact
+  local-barrier mixing with intra-pod neighbors over cheap ICI links,
+  latest-arrived snapshots from cross-pod neighbors whose DCI messages stay
+  in flight — the sim protocol of ``core/gossip.hierarchical_mix``.
 
 ``executor=None`` runs any protocol in timing-only mode (no values — the
 legacy ``straggler.simulate`` fast path).
@@ -181,6 +185,8 @@ class Protocol:
         self.engine = engine
         self.stop_round = stop_round
         self.rounds = np.zeros(engine.M, dtype=int)
+        # per-round eval accumulation: round -> [count, time_sum, param_sum]
+        self._round_acc: dict[int, list] = {}
 
     def start(self) -> None:
         raise NotImplementedError
@@ -190,6 +196,25 @@ class Protocol:
 
     def _past_stop(self, k: int) -> bool:
         return self.stop_round is not None and k > self.stop_round
+
+    def _accumulate_round_eval(self, j: int, k: int) -> None:
+        """Round-synchronous eval (barrier protocols): once every worker has
+        committed round k, record eval_fn(mean params) at the mean clock.
+        eval_every: 0 disables, n evaluates every n-th round."""
+        if self.eval_fn is None or self.eval_every <= 0 or k % self.eval_every:
+            return
+        ex, eng = self.executor, self.engine
+        acc = self._round_acc.setdefault(k, [0, 0.0, None])
+        w_j = ex.get_slice(ex.W, j)
+        acc[0] += 1
+        acc[1] += eng.clock
+        acc[2] = w_j if acc[2] is None else ex.apply(acc[2], w_j)
+        if acc[0] == eng.M:
+            import jax
+
+            mean = jax.tree.map(lambda x: x / eng.M, acc[2])
+            eng.trace.record_eval(acc[1] / eng.M, k, float(self.eval_fn(mean)))
+            del self._round_acc[k]
 
 
 # ---------------------------------------------------------------------------
@@ -220,8 +245,6 @@ class SyncGossip(Protocol):
         self._started: set[tuple[int, int]] = set()
         self._snaps: dict[tuple[int, int], PyTree] = {}
         self._refs: dict[tuple[int, int], int] = {}
-        # per-round eval accumulation: round -> [count, time_sum, param_sum]
-        self._round_acc: dict[int, list] = {}
 
     def start(self):
         for j in range(self.engine.M):
@@ -246,8 +269,7 @@ class SyncGossip(Protocol):
             self._snaps[(j, k)] = self.executor.get_slice(self.executor.W, j)
             self._refs[(j, k)] = len(self._out_nb[j])
         for o in self._out_nb[j]:
-            eng.schedule(eng.clock + eng.link_delay(j, o), ARRIVAL, o,
-                         src=j, round=k)
+            eng.send(j, o, round=k)
 
     def _maybe_start(self, j: int, k: int) -> None:
         if self._past_stop(k) or self.rounds[j] != k - 1 or (j, k) in self._started:
@@ -289,25 +311,8 @@ class SyncGossip(Protocol):
             if self._refs[(i, k - 1)] == 0:
                 del self._refs[(i, k - 1)], self._snaps[(i, k - 1)]
         loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
-        self._accumulate_eval(j, k)
+        self._accumulate_round_eval(j, k)
         return loss
-
-    def _accumulate_eval(self, j: int, k: int) -> None:
-        # eval_every: 0 disables, n evaluates every n-th round (all protocols)
-        if self.eval_fn is None or self.eval_every <= 0 or k % self.eval_every:
-            return
-        ex, eng = self.executor, self.engine
-        acc = self._round_acc.setdefault(k, [0, 0.0, None])
-        w_j = ex.get_slice(ex.W, j)
-        acc[0] += 1
-        acc[1] += eng.clock
-        acc[2] = w_j if acc[2] is None else ex.apply(acc[2], w_j)
-        if acc[0] == eng.M:
-            import jax
-
-            mean = jax.tree.map(lambda x: x / eng.M, acc[2])
-            eng.trace.record_eval(acc[1] / eng.M, k, float(self.eval_fn(mean)))
-            del self._round_acc[k]
 
 
 # ---------------------------------------------------------------------------
@@ -372,8 +377,7 @@ class AsyncPairwise(Protocol):
         nbrs = [o for o in map(int, eng.topology.neighbors_out(j)) if eng.alive[o]]
         if nbrs:
             partner = eng.choose(j, np.asarray(nbrs))
-            eng.schedule(eng.clock + eng.link_delay(j, partner), ARRIVAL,
-                         partner, src=j, round=k)
+            eng.send(j, partner, round=k)
         self._begin(j)
         self._periodic_eval()
         return {"loss": loss}
@@ -470,8 +474,7 @@ class StaleGossip(Protocol):
         self.rounds[j] = k
         for o in map(int, eng.topology.neighbors_out(j)):
             if eng.alive[o]:
-                eng.schedule(eng.clock + eng.link_delay(j, o), ARRIVAL, o,
-                             src=j, round=k, payload=snapshot)
+                eng.send(j, o, round=k, payload=snapshot)
         self._begin(j)
         self._periodic_eval()
         return {"loss": loss}
@@ -487,8 +490,143 @@ class StaleGossip(Protocol):
                               float(self.eval_fn(mean)))
 
 
+# ---------------------------------------------------------------------------
+# Hierarchical gossip: intra-pod barrier, cross-pod snapshots in flight
+# ---------------------------------------------------------------------------
+
+
+class HierGossip(Protocol):
+    """SGP-style two-level gossip (the sim rendering of
+    ``core/gossip.hierarchical_mix`` on a pod/DCI mesh, after Assran et al.):
+    worker j's round-k barrier covers only its *intra-pod* in-neighbors
+    (cheap ICI links — exact round-(k-1) estimates), while *cross-pod*
+    in-neighbors contribute their latest **arrived** snapshot, so the
+    expensive DCI messages stay in flight while the pod keeps mixing. The
+    consensus weights are the exact column of A (cross-pod buffers are
+    seeded with the shared round-0 initialization, so every entry is always
+    available); staleness of the DCI terms is the only approximation —
+    with zero DCI penalty the trajectory collapses to the paper's DSM.
+
+    Needs pod metadata: a mesh-aware engine (MeshSpec group_of) or a
+    :func:`~repro.core.topology.kronecker`/``hier`` topology."""
+
+    name = "hier"
+    supports_churn = False
+
+    def bind(self, engine, stop_round=None):
+        super().bind(engine, stop_round)
+        groups = engine.mesh.group_of if engine.mesh is not None \
+            else engine.topology.group_of
+        if groups is None:
+            raise ValueError(
+                "hier protocol needs pod metadata — run on a mesh-aware "
+                "engine or a kronecker/hier topology with group_of")
+        g = np.asarray(groups)
+        topo = engine.topology
+        self._g = g
+        self._in_intra, self._in_inter = [], []
+        self._out_intra, self._out_inter = [], []
+        for j in range(engine.M):
+            ins = list(map(int, topo.neighbors_in(j)))
+            outs = list(map(int, topo.neighbors_out(j)))
+            self._in_intra.append({i for i in ins if g[i] == g[j]})
+            self._in_inter.append([i for i in ins if g[i] != g[j]])
+            self._out_intra.append([o for o in outs if g[o] == g[j]])
+            self._out_inter.append([o for o in outs if g[o] != g[j]])
+        self._arrived: dict[tuple[int, int], set[int]] = {}
+        self._started: set[tuple[int, int]] = set()
+        self._snaps: dict[tuple[int, int], PyTree] = {}
+        self._refs: dict[tuple[int, int], int] = {}
+        # (dst, src) -> (round, snapshot): latest-arrived cross-pod estimate
+        self._stale: dict[tuple[int, int], tuple[int, PyTree]] = {}
+
+    def start(self):
+        eng, ex = self.engine, self.executor
+        if ex is not None:
+            # the shared round-0 initialization seeds every cross-pod buffer
+            for j in range(eng.M):
+                for i in self._in_inter[j]:
+                    self._stale[(j, i)] = (0, ex.get_slice(ex.W, i))
+        for j in range(eng.M):
+            self._broadcast(j, 0)
+        for j in range(eng.M):
+            self._maybe_start(j, 1)
+
+    def handle(self, ev):
+        if ev.kind == ARRIVAL:
+            j, i = ev.worker, ev.src
+            if self._g[i] == self._g[j]:       # ICI: barrier bookkeeping
+                self._arrived.setdefault((j, ev.round), set()).add(i)
+                self._maybe_start(j, ev.round + 1)
+            elif ev.payload is not None:       # DCI: refresh the stale buffer
+                cur = self._stale.get((j, i))
+                if cur is None or ev.round > cur[0]:
+                    self._stale[(j, i)] = (ev.round, ev.payload)
+            return None
+        if ev.kind == COMPUTE_DONE:
+            return self._complete(ev.worker, ev.round)
+        return None
+
+    def _broadcast(self, j: int, k: int) -> None:
+        eng, ex = self.engine, self.executor
+        if self._past_stop(k + 1):
+            return
+        snap = None
+        if ex is not None and (self._out_intra[j] or self._out_inter[j]):
+            snap = ex.get_slice(ex.W, j)
+        if ex is not None and self._out_intra[j]:
+            self._snaps[(j, k)] = snap
+            self._refs[(j, k)] = len(self._out_intra[j])
+        for o in self._out_intra[j]:
+            eng.send(j, o, round=k)
+        for o in self._out_inter[j]:
+            eng.send(j, o, round=k, payload=snap)
+
+    def _maybe_start(self, j: int, k: int) -> None:
+        if self._past_stop(k) or self.rounds[j] != k - 1 or (j, k) in self._started:
+            return
+        if not self._in_intra[j] <= self._arrived.get((j, k - 1), set()):
+            return
+        eng = self.engine
+        eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
+                     round=k)
+        self._started.add((j, k))
+
+    def _complete(self, j: int, k: int) -> dict:
+        eng, ex = self.engine, self.executor
+        loss = None
+        if ex is not None:
+            # j's own row is untouched since round k started: w_j(k-1)
+            w_start = ex.get_slice(ex.W, j)
+            l, grad = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
+            u, opt_j = ex.update_slice(grad, ex.get_slice(ex.opt, j),
+                                       w_start, k - 1)
+            col = np.array(eng.topology.A[:, j])
+            S = ex.W
+            for i in self._in_intra[j]:
+                S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+            for i in self._in_inter[j]:
+                S = ex.set_slice(S, i, self._stale[(j, i)][1])
+            mixed = ex.mix_column(S, col)   # exact weights, stale DCI values
+            ex.W = ex.set_slice(ex.W, j, ex.apply(mixed, u))
+            ex.opt = ex.set_slice(ex.opt, j, opt_j)
+            for i in self._in_intra[j]:
+                self._refs[(i, k - 1)] -= 1
+                if self._refs[(i, k - 1)] == 0:
+                    del self._refs[(i, k - 1)], self._snaps[(i, k - 1)]
+            loss = float(l)
+        self.rounds[j] = k
+        self._arrived.pop((j, k - 1), None)
+        self._broadcast(j, k)
+        self._maybe_start(j, k + 1)
+        if ex is not None:
+            self._accumulate_round_eval(j, k)
+        return {"loss": loss}
+
+
 PROTOCOLS: dict[str, type[Protocol]] = {
     "sync": SyncGossip,
     "async": AsyncPairwise,
     "stale": StaleGossip,
+    "hier": HierGossip,
 }

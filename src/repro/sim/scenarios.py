@@ -3,14 +3,21 @@
 A :class:`Scenario` bundles everything *about the environment* (as opposed to
 the algorithm) that shapes a simulated run:
 
-* ``compute``    — per-worker computation-time model (straggler distribution,
-                   heterogeneous speeds, or a pre-tabulated time matrix);
-* ``link_delay`` — per-message communication delay model;
-* ``churn``      — node fail / join schedule;
-* ``switches``   — topology switches at given virtual times;
-* ``seed``       — master seed; the engine spawns one independent stream per
-                   worker (``np.random.SeedSequence.spawn``) so event
-                   interleaving never perturbs any worker's draw sequence.
+* ``compute``      — per-worker computation-time model (straggler
+                     distribution, heterogeneous speeds, or a pre-tabulated
+                     time matrix);
+* ``link_delay``   — per-message communication delay model (flat — every
+                     link costs the same distribution);
+* ``link_classes`` — mesh-aware alternative: one :class:`LinkCost`
+                     (latency + bandwidth) per link class (``'ici'`` intra-
+                     group, ``'dci'`` cross-group); requires the engine to be
+                     given a :class:`MeshSpec`, which also supplies the
+                     per-message payload bytes the bandwidth term charges;
+* ``churn``        — node fail / join schedule;
+* ``switches``     — topology switches at given virtual times;
+* ``seed``         — master seed; the engine spawns one independent stream
+                     per worker (``np.random.SeedSequence.spawn``) so event
+                     interleaving never perturbs any worker's draw sequence.
 
 The computation-time *distributions* (the paper's §4 / Fig. 10 shapes) live
 here; ``repro.core.straggler`` re-exports them for backward compatibility.
@@ -167,6 +174,120 @@ def per_link_delay(D: np.ndarray) -> DelayModel:
 
 
 # ---------------------------------------------------------------------------
+# Mesh mirror + per-link-class cost model (tentpole: two link classes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkCost:
+    """Cost of one message on one link class: latency + size/bandwidth.
+
+    ``delay = latency + nbytes / bytes_per_time``, optionally multiplied by a
+    ``jitter`` draw (a :data:`TimeSampler`, drawn on the *sender's* stream so
+    determinism survives event interleaving). With ``jitter=None`` the cost
+    is a pure function of the payload — the deterministic-times path the
+    bit-match acceptance test pins down.
+    """
+
+    latency: float = 0.0
+    bytes_per_time: float = float("inf")   # bandwidth (payload units / vtime)
+    jitter: TimeSampler | None = None
+
+    def delay(self, rng: np.random.Generator, nbytes: int) -> float:
+        d = self.latency
+        if nbytes and np.isfinite(self.bytes_per_time):
+            d += nbytes / self.bytes_per_time
+        if self.jitter is not None:
+            d *= float(np.asarray(self.jitter(rng, ())))
+        return d
+
+    def describe(self) -> dict:
+        return {"latency": self.latency,
+                "bytes_per_time": self.bytes_per_time,
+                "jitter": self.jitter is not None}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Sim-only mirror of :class:`~repro.launch.mesh.WorkerMesh`.
+
+    Carries exactly what the engine's link model needs: which pod/group each
+    worker lives in (``group_of`` — intra-group edges are ICI class,
+    cross-group DCI) and the per-device bytes one bulk gossip collective
+    ships (``payload_bytes`` — `BusLayout.padded_bytes` of the layout-v2
+    plan, see :meth:`~repro.launch.mesh.WorkerMesh.sim_payload_bytes`), so
+    virtual time charges the real wire payloads.
+    """
+
+    group_of: tuple[int, ...]
+    payload_bytes: int = 0
+    name: str = "mesh"
+
+    def __post_init__(self):
+        object.__setattr__(self, "group_of",
+                           tuple(int(g) for g in self.group_of))
+
+    @property
+    def M(self) -> int:
+        return len(self.group_of)
+
+    @property
+    def n_groups(self) -> int:
+        return len(set(self.group_of))
+
+    @classmethod
+    def pods(cls, M: int, n_pods: int, *, payload_bytes: int = 0) -> "MeshSpec":
+        """M workers in n_pods equal contiguous pods (the multi-pod layout)."""
+        if M % n_pods:
+            raise ValueError(f"{M} workers do not split into {n_pods} pods")
+        group = np.repeat(np.arange(n_pods), M // n_pods)
+        return cls(group_of=tuple(group), payload_bytes=payload_bytes,
+                   name=f"pods-{n_pods}x{M // n_pods}")
+
+    @classmethod
+    def from_topology(cls, topo: Topology, *, payload_bytes: int = 0) -> "MeshSpec":
+        """Adopt a hierarchical topology's own pod assignment (kronecker)."""
+        if topo.group_of is None:
+            raise ValueError(f"{topo.name} carries no group metadata")
+        return cls(group_of=topo.group_of, payload_bytes=payload_bytes,
+                   name=f"mesh({topo.name})")
+
+    @classmethod
+    def ensure(cls, mesh, topology: Topology | None = None,
+               params_template=None, param_specs=None) -> "MeshSpec | None":
+        """Normalize: MeshSpec passes through; a WorkerMesh is mirrored
+        (group = coordinate along the leading worker axis, payload from the
+        bus layout plan when ``params_template`` is given); None stays None.
+        """
+        if mesh is None or isinstance(mesh, cls):
+            return mesh
+        from repro.launch.mesh import WorkerMesh
+
+        if isinstance(mesh, WorkerMesh):
+            return mesh.sim_spec(params_template=params_template,
+                                 param_specs=param_specs)
+        if topology is not None and getattr(mesh, "group_of", None) is not None:
+            return cls.from_topology(mesh)
+        raise TypeError(f"cannot build a MeshSpec from {type(mesh).__name__}")
+
+    def describe(self) -> dict:
+        return {"name": self.name, "workers": self.M,
+                "groups": self.n_groups, "payload_bytes": self.payload_bytes}
+
+
+ICI = "ici"
+DCI = "dci"
+
+
+def two_class_links(*, ici_latency: float = 0.0, dci_latency: float = 0.0,
+                    ici_bw: float = float("inf"), dci_bw: float = float("inf"),
+                    jitter: TimeSampler | None = None) -> dict[str, LinkCost]:
+    """{'ici': …, 'dci': …} LinkCost pair (jitter shared, sender-stream)."""
+    return {ICI: LinkCost(ici_latency, ici_bw, jitter),
+            DCI: LinkCost(dci_latency, dci_bw, jitter)}
+
+
+# ---------------------------------------------------------------------------
 # Scenario spec
 # ---------------------------------------------------------------------------
 
@@ -183,6 +304,7 @@ class Scenario:
     compute: ComputeModel = dataclasses.field(
         default_factory=lambda: sampled(deterministic(1.0)))
     link_delay: DelayModel = dataclasses.field(default_factory=no_delay)
+    link_classes: dict[str, LinkCost] | None = None
     churn: tuple[ChurnEvent, ...] = ()
     switches: tuple[TopologySwitch, ...] = ()
     seed: int = 0
@@ -193,6 +315,10 @@ class Scenario:
                 raise ValueError(f"churn kind must be fail|join, got {kind!r}")
             if t < 0:
                 raise ValueError("churn times must be >= 0")
+        if self.link_classes is not None:
+            missing = {ICI, DCI} - set(self.link_classes)
+            if missing:
+                raise ValueError(f"link_classes missing {sorted(missing)}")
 
     @property
     def has_churn(self) -> bool:
@@ -204,7 +330,7 @@ class Scenario:
 
     def describe(self) -> dict:
         """JSON-able summary (the scenario 'schema' written into traces)."""
-        return {
+        out = {
             "name": self.name,
             "seed": self.seed,
             "compute": getattr(self.compute, "describe", {"kind": "custom"}),
@@ -213,6 +339,10 @@ class Scenario:
             "churn": [[t, w, k] for t, w, k in self.churn],
             "switches": [[t, topo.name] for t, topo in self.switches],
         }
+        if self.link_classes is not None:
+            out["link_classes"] = {c: lc.describe()
+                                   for c, lc in sorted(self.link_classes.items())}
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -272,4 +402,21 @@ def topology_schedule(switches: list[TopologySwitch], *, dist: str = "spark",
         name="topology_schedule",
         compute=sampled(DISTRIBUTIONS[dist]()),
         switches=tuple(sorted(switches, key=lambda s: s[0])),
+        seed=seed)
+
+
+def datacenter(dist: str = "spark", *, ici_latency: float = 0.02,
+               dci_latency: float = 2.0, ici_bw: float = float("inf"),
+               dci_bw: float = float("inf"), seed: int = 0,
+               **dist_kw) -> Scenario:
+    """The two-link-class world the mesh-aware engine charges: cheap
+    intra-pod ICI hops vs expensive cross-pod DCI hops (Nedić et al.'s
+    comm/comp tradeoff with two classes). Needs a MeshSpec on the engine —
+    this is the hier-vs-ring scenario of `examples/hier_wallclock.py`."""
+    return Scenario(
+        name=f"datacenter-{dist}",
+        compute=sampled(DISTRIBUTIONS[dist](**dist_kw)),
+        link_classes=two_class_links(ici_latency=ici_latency,
+                                     dci_latency=dci_latency,
+                                     ici_bw=ici_bw, dci_bw=dci_bw),
         seed=seed)

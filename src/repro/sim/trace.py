@@ -39,10 +39,19 @@ class TraceRecord:
     src: int = -1       # source worker (ARRIVAL only)
     round: int = 0      # iteration index the event concerns
     loss: float | None = None  # train-batch loss (COMPUTE_DONE w/ executor)
+    link_class: str | None = None  # 'ici' | 'dci' (mesh-aware ARRIVAL only)
+    nbytes: int = 0     # message payload bytes charged on that link
+    wire_time: float = 0.0  # delay the link model charged for this message
 
     def as_tuple(self) -> tuple:
+        """Schedule identity — deliberately EXCLUDES the link-class
+        annotations, so a mesh-aware run with both classes at equal cost has
+        the same :meth:`Trace.signature` as the meshless run it bit-matches."""
         return (self.seq, self.t, self.kind, self.worker, self.src,
                 self.round, self.loss)
+
+    def as_row(self) -> tuple:
+        return self.as_tuple() + (self.link_class, self.nbytes, self.wire_time)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +124,22 @@ class Trace:
         vs = np.array([e.value for e in self.evals])
         return ts, vs
 
+    def link_accounting(self) -> dict[str, dict[str, float]]:
+        """Per-link-class totals over all delivered messages (mesh-aware
+        runs): message count, total payload bytes shipped, and total wire
+        time the scenario's :class:`~repro.sim.scenarios.LinkCost` charged.
+        Meshless runs (no class annotations) return an empty dict."""
+        out: dict[str, dict[str, float]] = {}
+        for r in self.records:
+            if r.kind != ARRIVAL or r.link_class is None:
+                continue
+            acc = out.setdefault(r.link_class,
+                                 {"messages": 0, "bytes": 0.0, "time": 0.0})
+            acc["messages"] += 1
+            acc["bytes"] += r.nbytes
+            acc["time"] += r.wire_time
+        return out
+
     # -- persistence / identity ------------------------------------------
 
     def signature(self) -> tuple:
@@ -122,12 +147,16 @@ class Trace:
         return tuple(r.as_tuple() for r in self.records)
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "M": self.M,
             "meta": self.meta,
-            "events": [r.as_tuple() for r in self.records],
+            "events": [r.as_row() for r in self.records],
             "evals": [[e.t, e.round, e.value] for e in self.evals],
         }
+        acct = self.link_accounting()
+        if acct:
+            out["link_accounting"] = acct
+        return out
 
     def save(self, path: str) -> str:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -141,8 +170,14 @@ class Trace:
             d = json.load(f)
         tr = cls(d["M"])
         tr.meta = d.get("meta", {})
-        for seq, t, kind, worker, src, rnd, loss in d["events"]:
-            tr.record(TraceRecord(seq, t, kind, worker, src, rnd, loss))
+        for row in d["events"]:
+            # rows are 7-wide (pre-mesh traces) or 10-wide (link-class cols)
+            seq, t, kind, worker, src, rnd, loss = row[:7]
+            cls_, nbytes, wire = (row[7:] + [None, 0, 0.0])[:3] \
+                if len(row) > 7 else (None, 0, 0.0)
+            tr.record(TraceRecord(seq, t, kind, worker, src, rnd, loss,
+                                  link_class=cls_, nbytes=nbytes,
+                                  wire_time=wire))
         for t, rnd, v in d.get("evals", []):
             tr.record_eval(t, rnd, v)
         return tr

@@ -61,6 +61,110 @@ def save(path: str, tree: PyTree, step: int | None = None) -> None:
             json.dump({"step": int(step)}, f)
 
 
+# ---------------------------------------------------------------------------
+# Worker-sharded checkpoints (340B-scale: no full-tree funnel through host)
+# ---------------------------------------------------------------------------
+
+
+def _strip_npz(path: str) -> str:
+    return path[:-len(".npz")] if path.endswith(".npz") else path
+
+
+def worker_coords(wmesh, M: int) -> list[str]:
+    """Shard keys in worker-index order: the WorkerMesh coordinates along
+    the worker axes (row-major, e.g. ``'pod1-data3'`` on a pod×data mesh),
+    or plain ``'w{j}'`` when no mesh is given (meshless stacked state)."""
+    if wmesh is None:
+        return [f"w{j}" for j in range(M)]
+    axes = list(wmesh.worker_axes)
+    sizes = [int(wmesh.mesh.shape[a]) for a in axes]
+    if int(np.prod(sizes)) != M:
+        raise ValueError(f"mesh hosts {int(np.prod(sizes))} workers, "
+                         f"tree is stacked over {M}")
+    out = []
+    for j in range(M):
+        rem, parts = j, []
+        for a, s in zip(reversed(axes), reversed(sizes)):
+            parts.append(f"{a}{rem % s}")
+            rem //= s
+        out.append("-".join(reversed(parts)))
+    return out
+
+
+def save_sharded(path: str, tree: PyTree, step: int | None = None, *,
+                 wmesh=None) -> None:
+    """Write one npz PER WORKER SHARD keyed by WorkerMesh coordinates.
+
+    The plain :func:`save` path device-gets the full (M, …) stacked tree on
+    one host before ``np.savez`` — at 340B scale that funnels M full
+    replicas through host RAM. Here each worker's slice is pulled and
+    written on its own (``{base}.shard-{coord}.npz``), so at most ONE
+    replica is resident at a time; ``{base}.meta.json`` records the shard
+    list for :func:`restore_sharded` to reassemble bit-exactly.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        raise ValueError("cannot shard an empty tree")
+    M = int(leaves[0].shape[0])
+    if any(x.shape[:1] != (M,) for x in leaves):
+        raise ValueError("sharded save needs a stacked tree (leading M dim)")
+    base = _strip_npz(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    coords = worker_coords(wmesh, M)
+    for j, coord in enumerate(coords):
+        # device-side slice, host transfer of ONE worker's replica at a time
+        slice_j = jax.tree.map(lambda x: x[j], tree)
+        np.savez(f"{base}.shard-{coord}.npz", **_flatten_with_paths(slice_j))
+    meta: dict[str, Any] = {"sharded": {"shards": coords}}
+    if step is not None:
+        meta["step"] = int(step)
+    with open(base + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    # a monolithic checkpoint left at the same base is now stale — remove it
+    # so restore() can never silently prefer the older full-tree file
+    for stale in (base + ".npz", base + ".npz.meta.json"):
+        if os.path.exists(stale):
+            os.remove(stale)
+
+
+def _sharded_meta(path: str) -> dict | None:
+    meta = _strip_npz(path) + ".meta.json"
+    if os.path.exists(meta):
+        with open(meta) as f:
+            d = json.load(f)
+        if "sharded" in d:
+            return d
+    return None
+
+
+def restore_sharded(path: str, like: PyTree) -> PyTree:
+    """Reassemble a :func:`save_sharded` checkpoint into `like`'s structure
+    (a stacked tree with leading M dim; abstract templates work). Stacking
+    the per-worker bit patterns in shard order is the exact inverse of the
+    per-slice save — round-trips are bit-exact, bf16 tags included."""
+    base = _strip_npz(path)
+    meta = _sharded_meta(path)
+    if meta is None:
+        raise FileNotFoundError(f"{base}.meta.json has no shard list")
+    shards = [np.load(f"{base}.shard-{c}.npz")
+              for c in meta["sharded"]["shards"]]
+    stored_by_key = {_base_key(f): f for f in shards[0].files}
+    like_keys = _flatten_keys(like)
+    assert set(stored_by_key) == like_keys, (
+        sorted(set(stored_by_key) ^ like_keys)[:5])
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_paths:
+        stored = stored_by_key[_path_key(path_k)]
+        raw = np.stack([s[stored] for s in shards])
+        if stored.endswith(_BF16_TAG):
+            raw = raw.view(jnp.bfloat16.dtype)
+        arr = jnp.asarray(raw, dtype=leaf.dtype)
+        assert arr.shape == leaf.shape, (stored, arr.shape, leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 class AsyncCheckpointWriter:
     """Background checkpoint writer: snapshot on call, ``np.savez`` off-thread.
 
@@ -77,6 +181,12 @@ class AsyncCheckpointWriter:
     At most ``max_pending`` snapshots are in flight; a further ``save()``
     first waits on the oldest (bounded snapshot memory). ``wait()`` drains
     the queue and re-raises any writer-thread exception.
+
+    ``save(..., wmesh=…)`` (or any non-None ``wmesh``-like sentinel) routes
+    the write through :func:`save_sharded`: the background thread pulls ONE
+    worker slice of the device-side snapshot at a time and writes per-shard
+    npz files keyed by the WorkerMesh coordinates — 340B-scale stacked state
+    never funnels through host RAM in full.
     """
 
     def __init__(self, max_pending: int = 2):
@@ -85,12 +195,18 @@ class AsyncCheckpointWriter:
         self._pending: collections.deque = collections.deque()
         self._max_pending = max(1, max_pending)
 
-    def save(self, path: str, tree: PyTree, step: int | None = None) -> None:
+    def save(self, path: str, tree: PyTree, step: int | None = None, *,
+             wmesh=None, sharded: bool = False) -> None:
         snap = jax.tree.map(
             lambda x: x.copy() if hasattr(x, "copy") else x, tree)
         while len(self._pending) >= self._max_pending:
             self._pending.popleft().result()
-        self._pending.append(self._pool.submit(save, path, snap, step))
+        if sharded or wmesh is not None:
+            fut = self._pool.submit(save_sharded, path, snap, step,
+                                    wmesh=wmesh)
+        else:
+            fut = self._pool.submit(save, path, snap, step)
+        self._pending.append(fut)
 
     def wait(self) -> None:
         while self._pending:
@@ -121,10 +237,13 @@ def restore(path: str, like: PyTree) -> PyTree:
     or plain (fp32-widened legacy checkpoints), independent of the dtype of
     `like` — only the *set of leaves* must match. `like` leaves only need
     ``.shape``/``.dtype``, so abstract ``ShapeDtypeStruct`` templates work —
-    no zero-tree allocation for large restores.
+    no zero-tree allocation for large restores. Worker-sharded checkpoints
+    (:func:`save_sharded`) are detected via their meta and reassembled.
     """
     if not path.endswith(".npz"):
         path = path + ".npz"
+    if not os.path.exists(path) and _sharded_meta(path) is not None:
+        return restore_sharded(path, like)
     data = np.load(path)
     stored_by_key = {_base_key(f): f for f in data.files}
     like_keys = _flatten_keys(like)
@@ -206,5 +325,6 @@ def latest_step(path: str) -> int | None:
     meta = path + ".meta.json"
     if os.path.exists(meta):
         with open(meta) as f:
-            return json.load(f)["step"]
+            # sharded metas always exist but carry 'step' only when given
+            return json.load(f).get("step")
     return None

@@ -78,6 +78,7 @@ def train(
     log_every: int = 50,
     ckpt_path: str | None = None,
     ckpt_every: int = 0,
+    ckpt_sharded: bool = False,
     verbose: bool = True,
 ) -> tuple[TrainState, History]:
     """Run `steps` iterations; `batches` yields per-step batch pytrees.
@@ -94,6 +95,9 @@ def train(
     :class:`~repro.train.checkpoint.AsyncCheckpointWriter` — a device-side
     snapshot (safe against the donated state) handed to a background writer
     thread — so the synchronous ``np.savez`` never stalls the loop.
+    ``ckpt_sharded=True`` writes per-worker shard files keyed by the
+    WorkerMesh coordinates (``checkpoint.save_sharded``) instead of
+    device-getting the full stacked tree on one host.
     """
     # Donating the state makes the step in-place on HBM: the params / opt
     # buffers (and the gossip bus pack buffers) reuse the incoming allocation
@@ -122,6 +126,10 @@ def train(
         t_win = time.perf_counter()
 
     writer = ckpt_lib.AsyncCheckpointWriter() if ckpt_path else None
+    ckpt_kw = {}
+    if ckpt_sharded:
+        ckpt_kw = dict(sharded=True,
+                       wmesh=mesh if isinstance(mesh, WorkerMesh) else None)
     ctx = compat.set_mesh(raw_mesh) if raw_mesh is not None else _nullcontext()
     try:
         with ctx:
@@ -137,10 +145,10 @@ def train(
                               f"spread {hist.param_spread[-1]:.3e}")
                 if ckpt_path and ckpt_every and (k + 1) % ckpt_every == 0:
                     flush()
-                    writer.save(ckpt_path, state.params, step=k + 1)
+                    writer.save(ckpt_path, state.params, step=k + 1, **ckpt_kw)
         flush()
         if ckpt_path:
-            writer.save(ckpt_path, state.params, step=steps)
+            writer.save(ckpt_path, state.params, step=steps, **ckpt_kw)
         if writer is not None:
             writer.close()        # surfaces background write errors
     except BaseException:
@@ -187,6 +195,14 @@ class SimRun:
         return self.trace.eval_curve()
 
 
+def _meshless_payload_bytes(params_template: PyTree) -> int:
+    """Per-message bytes of one whole-replica gossip payload: the bus
+    layout-v2 plan's padded buffer for an unsharded (k = 1) replica."""
+    from repro.core.bus import plan_layout
+
+    return plan_layout(params_template, lead_ndim=0).padded_bytes()
+
+
 def run_simulated(
     loss_fn: Callable[[PyTree, PyTree], jax.Array],
     params0: PyTree,
@@ -196,6 +212,7 @@ def run_simulated(
     gossip: GossipSpec,
     protocol: str = "sync",
     scenario=None,
+    mesh=None,
     rounds: int = 100,
     eval_fn: Callable[[PyTree], float] | None = None,
     eval_every: int = 1,
@@ -219,11 +236,18 @@ def run_simulated(
         contract as :func:`train`; replayed out-of-order via a cache for the
         asynchronous protocols.
       gossip: GossipSpec (topology + mixing backend; runs meshless).
-      protocol: 'sync' | 'async' | 'stale' (see ``repro.sim.protocols``).
+      protocol: 'sync' | 'async' | 'stale' | 'hier'
+        (see ``repro.sim.protocols``).
       scenario: ``repro.sim.Scenario`` (default: ideal unit-time world).
+      mesh: makes the engine mesh-aware (two link classes): a
+        ``sim.MeshSpec``, a ``launch.mesh.WorkerMesh`` (mirrored — worker
+        groups from the pod axis, per-message payload bytes from the bus
+        layout plan over ``params0``), or the string ``'topology'`` to adopt
+        a hierarchical (kronecker) topology's own pod assignment. Required
+        for scenarios with per-class ``link_classes`` costs.
       rounds: per-worker round budget (protocols stop scheduling past it).
       eval_fn: optional (mean-params pytree) -> float global loss; recorded
-        per round (sync: every `eval_every` rounds when the whole round
+        per round (sync/hier: every `eval_every` rounds when the whole round
         completes; async/stale: every `eval_every` completed computations).
       trace_path: if set, write the JSON event trace there.
     """
@@ -233,9 +257,23 @@ def run_simulated(
     if proto_cls is None:
         raise ValueError(f"unknown protocol {protocol!r}; "
                          f"choose from {sorted(sim.PROTOCOLS)}")
+    if mesh is not None:
+        from repro.launch.mesh import WorkerMesh
+
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params0)
+        if mesh == "topology":
+            mesh = sim.MeshSpec.from_topology(gossip.topology)
+        elif isinstance(mesh, WorkerMesh):
+            mesh = mesh.sim_spec(params_template=template)
+        if isinstance(mesh, sim.MeshSpec) and not mesh.payload_bytes:
+            # fill in the per-message wire bytes from the bus layout plan so
+            # bandwidth terms and the per-class byte accounting are real
+            mesh = dataclasses.replace(
+                mesh, payload_bytes=_meshless_payload_bytes(template))
     executor = sim.TrainExecutor(loss_fn, optimizer, params0, batches, gossip)
     proto = proto_cls(executor=executor, eval_fn=eval_fn, eval_every=eval_every)
-    eng = sim.Engine(gossip.topology, scenario)
+    eng = sim.Engine(gossip.topology, scenario, mesh=mesh)
     eng.run(proto, until_round=rounds, max_events=max_events, max_time=max_time)
     if trace_path:
         eng.trace.save(trace_path)

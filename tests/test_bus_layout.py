@@ -46,9 +46,9 @@ def _roundtrip_row_split(tree, k):
                   for s in range(k)]
     spans = {}
     for gi, g in enumerate(layout.groups):
-        if k > 1 and g.split_off < g.n:
+        if k > 1 and g.split_off < g.split_end:
             spans[gi] = jnp.stack([
-                shard_bufs[s][gi].reshape(-1)[g.split_off:g.n]
+                shard_bufs[s][gi].reshape(-1)[g.split_off:g.split_end]
                 for s in range(k)])
     span_iter = iter([spans[gi] for gi in sorted(spans)])
     return bus.unpack(shard_bufs[0], layout, lead_ndim=0,
@@ -103,7 +103,8 @@ def test_mixed_sharded_and_row_split_leaves(k):
     shard_bufs = [bus.pack(locals_[s], layout, lead_ndim=0, shard_index=s)
                   for s in range(k)]
     (g,) = layout.groups
-    span = jnp.stack([shard_bufs[s][0].reshape(-1)[g.split_off:g.n]
+    assert g.split_off == 0, "row-split leaves pack at the HEAD of the group"
+    span = jnp.stack([shard_bufs[s][0].reshape(-1)[g.split_off:g.split_end]
                       for s in range(k)])
     for s in range(k):
         back = bus.unpack(shard_bufs[s], layout, lead_ndim=0,
@@ -243,6 +244,57 @@ def test_property_pass1_padding_bound(rows, tail, k):
     sub = bus.sublane_rows(g.dtype)
     assert g.rows % sub == 0
     assert g.rows * g.cols - g.n < sub * bus.LANE
+
+
+# ---------------------------------------------------------------------------
+# Gather overlap: the row-split re-assembly folds into the nchunks pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_row_split_gather_count_unchanged_under_chunking_hlo():
+    """The post-mix model-axis all-gather of row-split leaves is issued off
+    the HEAD chunks of the nchunks pipeline (overlapping the later chunks'
+    fused passes) — but it must stay ONE gather per dtype group: chunking
+    pipelines the collective, it must not multiply it. Numerics stay equal
+    to the dense oracle at every nchunks."""
+    out = run_in_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import topology as T, bus
+from repro.core.gossip import GossipSpec, mix_pytree_reference
+from repro.launch.hlo_cost import analyze_hlo
+
+M, k = 2, 4
+key = jax.random.PRNGKey(0)
+params = {"w":  jax.random.normal(key, (M, 256, 16 * k)),  # shards over k
+          "kv": jax.random.normal(key, (M, 257, 5))}       # row-split
+pspecs = {"w": P("data", None, "model"), "kv": P("data", None, None)}
+topo = T.directed_ring_lattice(M, 1)
+spec = GossipSpec(topology=topo, backend="fused", worker_axes=("data",),
+                  model_axis="model")
+mesh = compat.make_mesh((M, k), ("data", "model"),
+                        axis_types=(compat.AxisType.Auto,) * 2)
+ref = mix_pytree_reference(params, topo.A)
+with compat.set_mesh(mesh):
+    p = jax.tree.map(lambda x, s: jax.device_put(
+        x, jax.NamedSharding(mesh, s)), params, pspecs)
+    for nchunks in (1, 3):
+        f = jax.jit(lambda q: bus.mix_bus(q, spec, mesh, nchunks=nchunks,
+                                          block_r=8, param_specs=pspecs))
+        got = f(p)
+        hc = analyze_hlo(f.lower(p).compile().as_text())
+        assert hc.coll_counts["all-gather"] == 1, (nchunks, hc.coll_counts)
+        assert hc.coll_counts["collective-permute"] == nchunks, \\
+            (nchunks, hc.coll_counts)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+            assert np.allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6), nchunks
+        print(f"nchunks{nchunks}-ok")
+print("gather-count-ok")
+""", n_devices=8)
+    assert "gather-count-ok" in out
+    assert "nchunks1-ok" in out and "nchunks3-ok" in out
 
 
 # ---------------------------------------------------------------------------

@@ -223,6 +223,147 @@ def test_in_flight_save_survives_donated_steps(tmp_path, monkeypatch):
     assert C.latest_step(path) == 0
 
 
+# ---------------------------------------------------------------------------
+# Worker-sharded checkpoints (per-shard npz keyed by WorkerMesh coordinates)
+# ---------------------------------------------------------------------------
+
+
+def _stacked_tree(M=4, seed=5):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(M, 6, 3)), jnp.float32),
+            "emb": jnp.asarray(rng.normal(size=(M, 7)), jnp.bfloat16),
+            "opt": {"steps": jnp.arange(M, dtype=jnp.int32)}}
+
+
+def _assert_bit_equal(a, b):
+    import jax
+
+    for (pa, xa), (pb, xb) in zip(
+            jax.tree_util.tree_flatten_with_path(a)[0],
+            jax.tree_util.tree_flatten_with_path(b)[0]):
+        assert pa == pb and xa.dtype == xb.dtype and xa.shape == xb.shape
+        assert np.array_equal(_bits(xa), _bits(xb)), pa
+
+
+def test_sharded_roundtrip_bit_exact(tmp_path):
+    tree = _stacked_tree(M=4)
+    path = os.path.join(tmp_path, "sharded.npz")
+    C.save_sharded(path, tree, step=9)
+    shards = sorted(f for f in os.listdir(tmp_path)
+                    if "shard-" in f and f.endswith(".npz"))
+    assert shards == [f"sharded.shard-w{j}.npz" for j in range(4)]
+    back = C.restore_sharded(path, tree)
+    _assert_bit_equal(back, tree)
+    # plain restore() detects the sharded meta and reassembles too
+    _assert_bit_equal(C.restore(path, tree), tree)
+    assert C.latest_step(path[:-len(".npz")]) == 9
+
+
+def test_sharded_keys_follow_worker_mesh_coords(tmp_path):
+    """Shard files are keyed by the WorkerMesh coordinates along the worker
+    axes (pod×data), in worker-index (row-major) order."""
+    from types import SimpleNamespace
+
+    from repro.launch.mesh import WorkerMesh
+
+    fake = SimpleNamespace(axis_names=("pod", "data", "model"),
+                           shape={"pod": 2, "data": 2, "model": 4})
+    wm = WorkerMesh(mesh=fake, worker_axes=("pod", "data"),
+                    model_axis="model")
+    assert C.worker_coords(wm, 4) == [
+        "pod0-data0", "pod0-data1", "pod1-data0", "pod1-data1"]
+    tree = _stacked_tree(M=4)
+    path = os.path.join(tmp_path, "mesh.npz")
+    C.save_sharded(path, tree, wmesh=wm)
+    assert sorted(f for f in os.listdir(tmp_path) if "shard" in f) == [
+        f"mesh.shard-pod{p}-data{d}.npz" for p in (0, 1) for d in (0, 1)]
+    _assert_bit_equal(C.restore_sharded(path, tree), tree)
+    with pytest.raises(ValueError):
+        C.save_sharded(path, _stacked_tree(M=3), wmesh=wm)  # 3 != 2×2
+
+
+def test_sharded_save_replaces_stale_monolithic(tmp_path):
+    """Re-checkpointing the same base path sharded removes the old full-tree
+    npz, so restore() can never silently prefer the stale file; and a
+    step-less sharded meta leaves latest_step() at None instead of raising."""
+    path = os.path.join(tmp_path, "ck.npz")
+    old = {"w": jnp.zeros((4, 3))}
+    new = {"w": jnp.ones((4, 3))}
+    C.save(path, old, step=1)
+    C.save_sharded(path, new)                 # same base, no step
+    assert not os.path.exists(path)           # stale monolithic gone
+    back = C.restore(path, new)
+    np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)
+    assert C.latest_step(path[:-len(".npz")]) is None
+
+
+def test_async_writer_sharded_path(tmp_path):
+    tree = _stacked_tree(M=3, seed=6)
+    path = os.path.join(tmp_path, "async_sharded.npz")
+    with C.AsyncCheckpointWriter() as w:
+        w.save(path, tree, step=2, sharded=True)
+        w.wait()
+        back = C.restore(path, tree)
+    _assert_bit_equal(back, tree)
+    assert not os.path.exists(path)   # no monolithic full-tree npz
+
+
+def test_sharded_save_never_holds_full_tree_on_host(tmp_path, monkeypatch):
+    """The 340B-scale contract: the writer pulls ONE worker slice at a time —
+    np.savez never sees more than 1/M of the stacked payload."""
+    tree = _stacked_tree(M=4)
+    per_worker = sum(
+        np.asarray(x[0]).nbytes for x in (tree["w"], tree["emb"],
+                                          tree["opt"]["steps"]))
+    real_savez = np.savez
+    seen = []
+
+    def spy_savez(path, **arrs):
+        seen.append(sum(a.nbytes for a in arrs.values()))
+        real_savez(path, **arrs)
+
+    monkeypatch.setattr(C.np, "savez", spy_savez)
+    C.save_sharded(os.path.join(tmp_path, "spy.npz"), tree)
+    assert len(seen) == 4
+    assert max(seen) <= per_worker
+
+
+def test_train_loop_writes_sharded_checkpoints(tmp_path):
+    """train(..., ckpt_sharded=True) checkpoints per-worker shards that
+    restore into the final state exactly."""
+    import jax
+
+    from repro.core.topology import undirected_ring
+    from repro.core.decentralized import replicate_for_workers
+    from repro.core.gossip import GossipSpec
+    from repro.optim import sgd
+    from repro.train.loop import train
+
+    M = 4
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(64, 4)); y = X @ rng.normal(size=4)
+
+    def loss(params, batch):
+        bx, by = batch
+        return jnp.mean((bx @ params["w"] - by) ** 2)
+
+    def batches():
+        while True:
+            yield (jnp.asarray(np.stack([X[:16]] * M)),
+                   jnp.asarray(np.stack([y[:16]] * M)))
+
+    path = os.path.join(tmp_path, "train.npz")
+    spec = GossipSpec(topology=undirected_ring(M), backend="einsum")
+    state, _ = train(loss, replicate_for_workers({"w": jnp.zeros(4)}, M),
+                     sgd(0.1), batches(), steps=6, gossip=spec,
+                     ckpt_path=path, ckpt_every=3, ckpt_sharded=True,
+                     verbose=False)
+    like = {"w": jnp.zeros((M, 4), jnp.float32)}
+    back = C.restore(path, like)
+    assert np.array_equal(np.asarray(back["w"]), np.asarray(state.params["w"]))
+    assert C.latest_step(path[:-len(".npz")]) == 6
+
+
 def test_async_writer_bounds_pending_saves(tmp_path, monkeypatch):
     """A third save waits on the oldest in-flight write (max_pending=2), so
     snapshot memory stays bounded; order of completed files is preserved."""

@@ -237,6 +237,159 @@ def test_max_events_cap():
 
 
 # ---------------------------------------------------------------------------
+# Mesh-aware engine: two link classes (ICI/DCI) — ISSUE 5 acceptance
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_equal_link_classes_bitmatch_meshless():
+    """Acceptance: with deterministic times and both link classes at equal
+    cost, run_simulated on the MESH path bit-matches the meshless run —
+    identical event schedule (trace signature) and identical parameters."""
+    from repro.sim import MeshSpec
+
+    topo = T.undirected_ring(8)
+    scen_flat = scenarios.Scenario(
+        name="flat", link_delay=scenarios.constant_delay(0.25))
+    flat = _sim("sync", topo, rounds=15, scenario=scen_flat)
+    scen_cls = scenarios.Scenario(
+        name="two-class",
+        link_classes=scenarios.two_class_links(ici_latency=0.25,
+                                               dci_latency=0.25))
+    meshy = _sim("sync", topo, rounds=15, scenario=scen_cls,
+                 mesh=MeshSpec.pods(8, 2, payload_bytes=4096))
+    assert flat.trace.signature() == meshy.trace.signature()
+    assert np.array_equal(np.asarray(flat.params["w"]),
+                          np.asarray(meshy.params["w"]))
+    # the mesh run additionally carries per-class accounting
+    acct = meshy.trace.link_accounting()
+    assert set(acct) == {"ici", "dci"}
+    assert acct["dci"]["bytes"] == acct["dci"]["messages"] * 4096
+
+
+def test_mesh_dci_penalty_slows_only_cross_pod_messages():
+    """DCI ≫ ICI: the clock feels the cross-pod hops, the sync trajectory
+    does not change one bit (schedule independence, now per link class)."""
+    from repro.sim import MeshSpec
+
+    topo = T.undirected_ring(8)
+    base = _sim("sync", topo, rounds=12, scenario=scenarios.ideal())
+    scen = scenarios.Scenario(
+        name="dci-heavy",
+        link_classes=scenarios.two_class_links(dci_latency=5.0))
+    slow = _sim("sync", topo, rounds=12, scenario=scen,
+                mesh=MeshSpec.pods(8, 2))
+    assert np.array_equal(np.asarray(base.params["w"]),
+                          np.asarray(slow.params["w"]))
+    assert slow.virtual_time > base.virtual_time
+    acct = slow.trace.link_accounting()
+    assert acct["ici"]["time"] == 0.0
+    assert acct["dci"]["time"] > 0.0
+
+
+def test_link_classes_require_mesh():
+    from repro.sim import Engine
+
+    scen = scenarios.Scenario(
+        name="cls", link_classes=scenarios.two_class_links(dci_latency=1.0))
+    with pytest.raises(ValueError):
+        Engine(T.undirected_ring(4), scen)
+
+
+def test_finite_bandwidth_requires_payload_bytes():
+    """A finite bytes_per_time with payload_bytes == 0 would silently charge
+    zero transfer time — the engine refuses instead."""
+    from repro.sim import Engine, MeshSpec
+
+    scen = scenarios.Scenario(
+        name="bw", link_classes=scenarios.two_class_links(dci_bw=1e6))
+    with pytest.raises(ValueError):
+        Engine(T.undirected_ring(4), scen, mesh=MeshSpec.pods(4, 2))
+    # latency-only costs are fine without a payload
+    scen2 = scenarios.Scenario(
+        name="lat", link_classes=scenarios.two_class_links(dci_latency=1.0))
+    Engine(T.undirected_ring(4), scen2, mesh=MeshSpec.pods(4, 2))
+
+
+def test_hier_protocol_zero_dci_penalty_tracks_sync():
+    """With zero DCI penalty nothing is stale: the hier protocol's
+    trajectory collapses to the paper's DSM (same recursion, different
+    contraction order — allclose, and the same round clock)."""
+    topo = T.hier(2, 4)
+    sync = _sim("sync", topo, rounds=15, scenario=scenarios.ideal())
+    scen = scenarios.Scenario(name="zero-dci",
+                              link_classes=scenarios.two_class_links())
+    hier = _sim("hier", topo, rounds=15, scenario=scen, mesh="topology")
+    assert hier.virtual_time == sync.virtual_time
+    assert np.allclose(np.asarray(hier.params["w"]),
+                       np.asarray(sync.params["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_hier_protocol_overlaps_dci_rounds():
+    """Under a DCI penalty the hier protocol's intra-pod barrier keeps
+    rounds at ICI cost (cross-pod messages stay in flight), while plain sync
+    on the same topology pays the DCI latency every round — and the hier run
+    still learns."""
+    topo = T.hier(2, 4)
+    scen = scenarios.Scenario(
+        name="dci-heavy", compute=scenarios.sampled(scenarios.uniform()),
+        link_classes=scenarios.two_class_links(dci_latency=4.0), seed=2)
+    hier = _sim("hier", topo, rounds=30, scenario=scen, mesh="topology",
+                eval_every=15)
+    sync = _sim("sync", topo, rounds=30, scenario=scen, mesh="topology")
+    assert hier.virtual_time < 0.5 * sync.virtual_time
+    _, losses = hier.eval_curve()
+    assert losses[-1] < 0.5 * losses[0]
+    # every DCI message was charged the payload + latency
+    acct = hier.trace.link_accounting()
+    assert acct["dci"]["messages"] > 0
+    assert acct["dci"]["time"] >= 4.0 * acct["dci"]["messages"]
+
+
+def test_hier_protocol_needs_pod_metadata():
+    topo = T.undirected_ring(8)      # no groups, engine meshless
+    with pytest.raises(ValueError):
+        _sim("hier", topo, rounds=5, scenario=scenarios.ideal())
+
+
+def test_worker_mesh_payload_bytes_mirror():
+    """WorkerMesh.sim_payload_bytes == BusLayout.padded_bytes of the local
+    shard view (the exact per-device bytes one bulk collective ships)."""
+    from types import SimpleNamespace
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import bus
+    from repro.launch.mesh import WorkerMesh
+
+    template = {"w": jax.ShapeDtypeStruct((48, 32), jnp.float32),
+                "kv": jax.ShapeDtypeStruct((33, 5), jnp.float32)}
+    # k == 1: whole-replica payload
+    wm1 = WorkerMesh(mesh=SimpleNamespace(axis_names=("data",),
+                                          shape={"data": 4}),
+                     worker_axes=("data",), model_axis=None)
+    expect = bus.plan_layout(template, lead_ndim=0).padded_bytes()
+    assert wm1.sim_payload_bytes(template) == expect
+    # k == 4, no specs: everything row-splits
+    wm4 = WorkerMesh(mesh=SimpleNamespace(axis_names=("data", "model"),
+                                          shape={"data": 4, "model": 4}),
+                     worker_axes=("data",), model_axis="model")
+    got = wm4.sim_payload_bytes(template)
+    local = {"w": jax.ShapeDtypeStruct((48 * 32,), jnp.float32),
+             "kv": jax.ShapeDtypeStruct((33 * 5,), jnp.float32)}
+    expect4 = bus.plan_layout(local, lead_ndim=0, shards=4,
+                              leaf_sharded=(False, False)).padded_bytes()
+    assert got == expect4 < expect
+    # grouping: a single worker axis is ONE pod (all edges ICI); with a pod
+    # axis, groups follow the leading worker-axis coordinate
+    assert wm1.sim_spec().group_of == (0, 0, 0, 0)
+    wm_pod = WorkerMesh(mesh=SimpleNamespace(axis_names=("pod", "data"),
+                                             shape={"pod": 2, "data": 3}),
+                        worker_axes=("pod", "data"), model_axis=None)
+    assert wm_pod.sim_spec().group_of == (0, 0, 0, 1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
 # Fig. 5 integration: ring vs clique with REAL losses (acceptance criterion)
 # ---------------------------------------------------------------------------
 

@@ -107,6 +107,82 @@ def test_metropolis_on_irregular_graph():
     assert t.spectral_gap > 0
 
 
+@pytest.mark.parametrize("M", [8, 32])
+@pytest.mark.parametrize("inner_kind", ["ring", "pairing"])
+def test_kronecker_edge_classes_partition(M, inner_kind):
+    """Every directed edge of a kronecker topology is classified intra-pod
+    (ICI) or cross-pod (DCI), the two sets partition the off-diagonal
+    support, and the counts follow the product structure: cross-pod edges =
+    offdiag-nnz(A_outer) × nnz(A_inner), intra-pod edges = (# pods with a
+    self weight) × offdiag-nnz(A_inner)."""
+    P_, s = 2, M // 2
+    if inner_kind == "ring":
+        inner = T.undirected_ring(s)          # pod⊗ring
+    else:
+        inner = T.one_peer_exponential(s, 1)  # pairing⊗ring: degree-1 pairs
+    outer = T.undirected_ring(P_)
+    k = T.kronecker(outer, inner)
+    assert k.group_of == tuple(np.repeat(np.arange(P_), s))
+    ec = T.edge_classes(k)
+    g = np.asarray(k.group_of)
+    # the two classes partition the off-diagonal support exactly
+    support = {(int(i), int(j)) for i, j in zip(*np.nonzero(k.A)) if i != j}
+    assert set(ec["ici"]) | set(ec["dci"]) == support
+    assert not set(ec["ici"]) & set(ec["dci"])
+    assert all(g[i] == g[j] for i, j in ec["ici"])
+    assert all(g[i] != g[j] for i, j in ec["dci"])
+    # product-structure counts
+    nnz_in = int(np.count_nonzero(inner.A))
+    offdiag_in = nnz_in - int(np.count_nonzero(np.diag(inner.A)))
+    offdiag_out = int(np.count_nonzero(outer.A)) \
+        - int(np.count_nonzero(np.diag(outer.A)))
+    pods_with_self = int(np.count_nonzero(np.diag(outer.A)))
+    assert len(ec["dci"]) == offdiag_out * nnz_in
+    assert len(ec["ici"]) == pods_with_self * offdiag_in
+
+
+def test_edge_classes_external_grouping_and_default():
+    """A flat topology classifies against an explicit mesh grouping (the
+    flat-ring-on-pods case); with no grouping at all every edge is ICI."""
+    ring = T.undirected_ring(8)
+    ec = T.edge_classes(ring)                     # no groups anywhere
+    assert ec["dci"] == [] and len(ec["ici"]) == 16
+    ec = T.edge_classes(ring, group_of=np.repeat([0, 1], 4))
+    # exactly the 2 pod-boundary edges (3↔4, 7↔0), both directions
+    assert sorted(ec["dci"]) == [(0, 7), (3, 4), (4, 3), (7, 0)]
+    assert len(ec["ici"]) == 12
+    with pytest.raises(ValueError):
+        T.edge_classes(ring, group_of=[0, 1])     # wrong length
+
+
+def test_hier_builder_and_split_kronecker():
+    h = T.hier(4, 8)                              # ring over pods ⊗ clique
+    assert h.M == 32 and h.group_of is not None
+    intra, inter = T.split_kronecker(h)
+    # the two stages compose back to the kronecker matrix…
+    assert np.allclose(inter.A @ intra.A, h.A, atol=1e-9)
+    # …and land entirely in their own link class
+    assert T.edge_classes(intra)["dci"] == []
+    assert T.edge_classes(inter)["ici"] == []
+    with pytest.raises(ValueError):
+        T.split_kronecker(T.undirected_ring(8))   # no group metadata
+
+
+def test_split_hierarchical_spec_matches_dense_mix():
+    import jax.numpy as jnp
+
+    from repro.core.gossip import (GossipSpec, hierarchical_mix, mix_pytree,
+                                   mix_pytree_reference, split_hierarchical)
+
+    h = T.hier(2, 4)
+    spec = GossipSpec(topology=h, backend="einsum")
+    intra, inter = split_hierarchical(spec)
+    x = {"w": jnp.arange(8.0 * 3).reshape(8, 3)}
+    want = mix_pytree_reference(x, h.A)
+    got = hierarchical_mix(x, intra, inter)
+    assert np.allclose(np.asarray(got["w"]), np.asarray(want["w"]), atol=1e-5)
+
+
 def test_kronecker_hierarchical_topology():
     """Beyond-paper: A_outer ⊗ A_inner is a valid consensus matrix and its
     spectral gap follows the eigenvalue product rule."""
