@@ -1,0 +1,108 @@
+"""Fault-injection simulator lane: every protocol through churn + link
+faults, plus the recovery machinery end-to-end.
+
+Four cells — one per protocol — run a preemption wave AND a pod-scoped DCI
+outage on a hier topology, asserting the run completes, survivors make
+progress, and the trace's link accounting charges the configured downtime.
+A fifth cell drives ``RecoveryPolicy`` through ``run_simulated`` with an
+injected step fault (retry → backoff → checkpoint restore) and reports the
+recovery counters the trace carries. Writes results/bench/sim_faults.json
+— the CI fault lane's artifact.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import topology as T
+from repro.sim import scenarios
+from repro.train.loop import RecoveryPolicy
+
+DCI = 4.0
+
+
+def _fault_scenario(M: int, pods: int, seed: int = 7):
+    """Preemption wave + mid-run pod-1 DCI outage on one scenario."""
+    import dataclasses
+
+    wave = scenarios.preemption_wave(M, start=6.0, interval=2.0, count=2,
+                                     down_for=8.0, dist="spark", seed=seed)
+    outage = scenarios.regional_outage(pod=1, start=10.0, duration=12.0,
+                                       dist="spark", dci_latency=DCI,
+                                       seed=seed)
+    return dataclasses.replace(outage, churn=wave.churn,
+                               name="preempt+outage")
+
+
+def _protocol_cell(proto: str, quick: bool, seed: int = 0) -> dict:
+    pods, pod_size = (2, 2) if quick else (3, 3)
+    M = pods * pod_size
+    topo = T.hier(pods, pod_size)
+    scen = _fault_scenario(M, pods)
+    rounds = 10 if quick else 25
+    kw = {"barrier_timeout": 6.0} if proto in ("sync", "hier") else {}
+    problem = common.problem_linear(S=256, n=16, seed=seed)
+    t0 = time.perf_counter()
+    r = common.run_sim(problem, topo, rounds=rounds, lr=0.1, seed=seed,
+                       protocol=proto, scenario=scen, mesh="topology",
+                       eval_every=0, **kw)
+    dt = time.perf_counter() - t0
+    acct = r.trace.link_accounting()
+    assert acct["dci"]["downtime"] == 12.0, acct["dci"]
+    rounds_done = np.asarray(r.rounds)
+    assert rounds_done.max() >= rounds, rounds_done
+    return {"bench": "faults", "topology": topo.name, "mode": f"{proto}",
+            "scenario": scen.name, "events": len(r.trace), "wall_s": dt,
+            "events_per_sec": len(r.trace) / dt,
+            "virtual_time": float(r.virtual_time),
+            "max_round": int(rounds_done.max()),
+            "min_round": int(rounds_done.min()),
+            "dci_downtime": acct["dci"]["downtime"],
+            "dci_retried_messages": acct["dci"]["retried_messages"],
+            "dci_retried_bytes": acct["dci"]["retried_bytes"]}
+
+
+def _recovery_cell(quick: bool, seed: int = 0) -> dict:
+    """RecoveryPolicy end-to-end: injected step faults retry with backoff,
+    exhaustion restores from the sharded checkpoint, counters land in the
+    trace meta."""
+    M = 4 if quick else 6
+    topo = T.undirected_ring(M)
+    rounds = 12 if quick else 30
+    problem = common.problem_linear(S=256, n=16, seed=seed)
+
+    fail_rounds = {3, 4}
+
+    def fault_inject(worker: int, rnd: int, attempt: int) -> bool:
+        return worker == 1 and rnd in fail_rounds and attempt == 0
+
+    with tempfile.TemporaryDirectory() as td:
+        policy = RecoveryPolicy(max_retries=1, backoff_base=0.25,
+                                ckpt_path=os.path.join(td, "ck.npz"),
+                                ckpt_every=4)
+        t0 = time.perf_counter()
+        r = common.run_sim(problem, topo, rounds=rounds, lr=0.1, seed=seed,
+                           protocol="sync",
+                           scenario=scenarios.heavy_tail("spark", seed=7),
+                           eval_every=0, recovery=policy,
+                           fault_inject=fault_inject)
+        dt = time.perf_counter() - t0
+    rec = r.trace.meta["recovery"]
+    assert rec["step_failures"] >= len(fail_rounds), rec
+    assert rec["retries"] >= 1 and rec["checkpoints"] >= 1, rec
+    return {"bench": "faults", "topology": topo.name, "mode": "recovery",
+            "events": len(r.trace), "wall_s": dt,
+            "events_per_sec": len(r.trace) / dt,
+            "virtual_time": float(r.virtual_time), **rec}
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = [_protocol_cell(p, quick) for p in ("sync", "async", "stale",
+                                               "hier")]
+    rows.append(_recovery_cell(quick))
+    common.save_json("sim_faults", rows)
+    return rows

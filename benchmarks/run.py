@@ -24,6 +24,7 @@ BENCHES = [
     ("bus", "benchmarks.bench_bus"),
     ("groups", "benchmarks.bench_groups"),
     ("sim", "benchmarks.bench_sim"),
+    ("faults", "benchmarks.bench_faults"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -44,7 +44,8 @@ from repro import compat
 from repro.core.topology import Topology
 
 __all__ = ["GossipSpec", "mix_pytree", "mix_reference", "make_mixer",
-           "hierarchical_mix", "split_hierarchical"]
+           "hierarchical_mix", "split_hierarchical",
+           "survivor_mix", "survivor_hierarchical_mix"]
 
 PyTree = Any
 
@@ -272,3 +273,40 @@ def hierarchical_mix(params: PyTree, intra: GossipSpec, inter: GossipSpec, mesh=
     ``repro.sim.protocols``.
     """
     return mix_pytree(mix_pytree(params, intra, mesh), inter, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Survivor-renormalized mixing (fault tolerance — mix over a partial fleet)
+# ---------------------------------------------------------------------------
+
+
+def survivor_mix(params: PyTree, topology: Topology, alive,
+                 mode: str = "reabsorb") -> PyTree:
+    """Consensus step over the survivors only (dense path).
+
+    ``alive`` is a boolean live-mask over the M workers; the consensus
+    matrix is repaired with :func:`~repro.core.topology.survivor_matrix`
+    (dead rows/columns isolated, surviving columns re-stochasticized), so
+    dead workers' estimates get zero weight and dead slices pass through
+    untouched. With a full live-mask the repaired matrix IS ``topology.A``
+    (bit-identical), so the result bit-matches the unmasked einsum mix."""
+    from repro.core.topology import survivor_matrix
+
+    A = survivor_matrix(topology.A, np.asarray(alive, dtype=bool), mode)
+    return mix_pytree_reference(params, A)
+
+
+def survivor_hierarchical_mix(params: PyTree, topology: Topology, alive,
+                              mode: str = "reabsorb") -> PyTree:
+    """Two-stage hierarchical mix with churn re-planned stages (dense path).
+
+    The kronecker topology's intra/inter stages are repaired with
+    :func:`~repro.core.topology.repair_hier_stages` — whole-pod drops
+    contract the outer graph (surviving pods bridged and re-weighted) —
+    then applied back-to-back. Full live-mask ⇒ bit-matches
+    :func:`hierarchical_mix` on the einsum backend."""
+    from repro.core.topology import repair_hier_stages
+
+    intra_A, inter_A = repair_hier_stages(
+        topology, np.asarray(alive, dtype=bool), mode)
+    return mix_pytree_reference(mix_pytree_reference(params, intra_A), inter_A)

@@ -30,7 +30,11 @@ __all__ = [
     "kronecker",
     "hier",
     "split_kronecker",
+    "kronecker_factors",
     "edge_classes",
+    "survivor_matrix",
+    "survivor_column",
+    "repair_hier_stages",
     "one_peer_exponential",
     "metropolis_weights",
     "uniform_weights",
@@ -324,6 +328,22 @@ def split_kronecker(topo: Topology) -> tuple[Topology, Topology]:
     stages ``core/gossip.hierarchical_mix`` runs back-to-back and the
     simulator's `hier` protocol overlaps (intra barrier, inter in flight).
     Requires ``topo.group_of`` with equal-size contiguous groups."""
+    A_outer, A_inner = kronecker_factors(topo)
+    P_, s = A_outer.shape[0], A_inner.shape[0]
+    intra = Topology(name=f"{topo.name}-intra", A=np.kron(np.eye(P_), A_inner),
+                     directed=topo.directed, group_of=topo.group_of)
+    inter = Topology(name=f"{topo.name}-inter", A=np.kron(A_outer, np.eye(s)),
+                     directed=topo.directed, group_of=topo.group_of)
+    return intra, inter
+
+
+def kronecker_factors(topo: Topology) -> tuple[np.ndarray, np.ndarray]:
+    """Recover (A_outer, A_inner) of a :func:`kronecker` topology.
+
+    Block (p, q) of A is ``A_outer[p, q] · A_inner`` and A_inner's entries sum
+    to s (columns each sum to 1), so each block's total weight is
+    ``s · A_outer[p, q]``. Raises ValueError if the topology is not a
+    Kronecker product over equal contiguous groups."""
     if topo.group_of is None:
         raise ValueError(f"{topo.name} has no group metadata (not a kronecker)")
     g = np.asarray(topo.group_of)
@@ -331,19 +351,152 @@ def split_kronecker(topo: Topology) -> tuple[Topology, Topology]:
     s = topo.M // P_
     if topo.M != P_ * s or not np.array_equal(g, np.repeat(np.arange(P_), s)):
         raise ValueError("split_kronecker needs equal contiguous groups")
-    # recover the factors: block (p, q) is A_out[p, q]·A_in, and A_in's
-    # columns sum to 1, so each block's total weight is s·A_out[p, q]
     blocks = topo.A.reshape(P_, s, P_, s).transpose(0, 2, 1, 3)
     A_outer = blocks.sum((2, 3)) / s
     p0, q0 = np.unravel_index(int(np.argmax(A_outer)), A_outer.shape)
     A_inner = blocks[p0, q0] / A_outer[p0, q0]
     if not np.allclose(np.kron(A_outer, A_inner), topo.A, atol=1e-9):
         raise ValueError(f"{topo.name} is not a kronecker of its blocks")
-    intra = Topology(name=f"{topo.name}-intra", A=np.kron(np.eye(P_), A_inner),
-                     directed=topo.directed, group_of=topo.group_of)
-    inter = Topology(name=f"{topo.name}-inter", A=np.kron(A_outer, np.eye(s)),
-                     directed=topo.directed, group_of=topo.group_of)
-    return intra, inter
+    return A_outer, A_inner
+
+
+# ---------------------------------------------------------------------------
+# Survivor-renormalized mixing (fault tolerance: mix over a partial fleet)
+# ---------------------------------------------------------------------------
+
+
+def survivor_column(col: np.ndarray, j: int, keep: np.ndarray,
+                    mode: str = "reabsorb") -> np.ndarray:
+    """Repair ONE consensus column for a partial set of usable estimates.
+
+    ``col`` is column j of A (worker j's mixing weights over the in-estimate
+    stack); ``keep[i]`` says whether estimate i is usable (alive / arrived).
+    Dropped weight is either reabsorbed into the self loop (``'reabsorb'`` —
+    w_j keeps the lost mass, the circulant-friendly repair) or spread
+    proportionally over the survivors (``'renormalize'``). The result stays
+    stochastic over the kept entries; with everything kept the input column
+    comes back bit-identical."""
+    col = np.asarray(col, np.float64).copy()
+    keep = np.asarray(keep, dtype=bool)
+    drop = ~keep
+    drop[j] = False          # worker j always holds its own estimate
+    if not drop.any():
+        return col
+    lost = float(col[drop].sum())
+    col[drop] = 0.0
+    if mode == "reabsorb":
+        col[j] += lost
+    elif mode == "renormalize":
+        s = col.sum()
+        if s <= 0.0:
+            col[j] = 1.0
+        else:
+            col /= s
+    else:
+        raise ValueError(f"survivor mode must be reabsorb|renormalize, got {mode!r}")
+    return col
+
+
+def survivor_matrix(A: np.ndarray, alive: np.ndarray,
+                    mode: str = "reabsorb") -> np.ndarray:
+    """Repair a consensus matrix for a partial worker fleet.
+
+    Given the doubly-stochastic ``A`` and a boolean live-mask, returns a raw
+    (M, M) matrix (NOT a Topology — the repair of a directed graph need not
+    stay doubly stochastic) where
+
+    * dead workers are isolated: their row and column become the identity
+      row/column (they hold their last state and contribute to nobody);
+    * every surviving column stays stochastic: weight that pointed at dead
+      in-neighbors is reabsorbed into the self loop (``'reabsorb'``) or
+      renormalized over the survivors (``'renormalize'``);
+    * for symmetric A (the undirected/Birkhoff-circulant case) the reabsorb
+      repair keeps rows stochastic too, so the matrix is again doubly
+      stochastic over the survivor block;
+    * a full live-mask returns A bit-identically (copy) — the unmasked path.
+    """
+    A = np.asarray(A, np.float64)
+    alive = np.asarray(alive, dtype=bool)
+    if alive.shape != (A.shape[0],):
+        raise ValueError(f"live mask covers {alive.shape} workers, "
+                         f"matrix is {A.shape}")
+    if not alive.any():
+        raise ValueError("survivor_matrix needs at least one live worker")
+    out = A.copy()
+    if alive.all():
+        return out
+    M = A.shape[0]
+    for j in range(M):
+        if alive[j]:
+            out[:, j] = survivor_column(A[:, j], j, alive, mode)
+        else:
+            out[:, j] = 0.0
+            out[j, j] = 1.0
+    return out
+
+
+def _bridge_adjacency(adj: np.ndarray, node_alive: np.ndarray) -> np.ndarray:
+    """Contract dead nodes out of an undirected graph: live p and q become
+    adjacent iff the original graph connects them through a path whose
+    interior is entirely dead (so a ring bridges across a dead arc)."""
+    P_ = adj.shape[0]
+    new = np.zeros_like(adj)
+    for p in np.nonzero(node_alive)[0]:
+        stack = list(np.nonzero(adj[p])[0])
+        seen = {int(p)}
+        while stack:
+            q = int(stack.pop())
+            if q in seen:
+                continue
+            seen.add(q)
+            if node_alive[q]:
+                new[p, q] = new[q, p] = True
+            else:
+                stack.extend(np.nonzero(adj[q])[0])
+    np.fill_diagonal(new, False)
+    return new
+
+
+def repair_hier_stages(topo: Topology, alive: np.ndarray,
+                       mode: str = "reabsorb") -> tuple[np.ndarray, np.ndarray]:
+    """Churn re-plan of the two hierarchical mixing stages.
+
+    Returns raw ``(intra_A, inter_A)`` matrices on the full M nodes such
+    that ``inter_A @ intra_A`` is the repaired hierarchical consensus step:
+
+    * intra: each pod's inner block survivor-repaired over its live members;
+    * inter: pods that lost EVERY member are contracted out of the outer
+      graph — their former neighbors are bridged (a ring over pods re-closes
+      across a dead pod) and the contracted graph gets fresh Metropolis
+      weights, so the surviving pods stay connected — then partially-dead
+      pods get the per-worker survivor repair on the expanded stage. A
+      directed outer factor cannot be re-weighted symmetrically and falls
+      back to plain survivor repair (no bridging).
+
+    With a full live-mask the stages are exactly ``split_kronecker``'s.
+    """
+    alive = np.asarray(alive, dtype=bool)
+    intra_t, inter_t = split_kronecker(topo)
+    if alive.all():
+        return intra_t.A.copy(), inter_t.A.copy()
+    intra_A = survivor_matrix(intra_t.A, alive, mode)
+    g = np.asarray(topo.group_of)
+    P_ = int(g.max()) + 1
+    s = topo.M // P_
+    pod_alive = np.array([bool(alive[g == p].any()) for p in range(P_)])
+    if pod_alive.all() or topo.directed:
+        inter_A = survivor_matrix(inter_t.A, alive, mode)
+    else:
+        A_outer, _ = kronecker_factors(topo)
+        adj = A_outer > 1e-12
+        np.fill_diagonal(adj, False)
+        if not np.array_equal(adj, adj.T):
+            inter_A = survivor_matrix(inter_t.A, alive, mode)
+        else:
+            bridged = _bridge_adjacency(adj, pod_alive)
+            A_outer2 = metropolis_weights(bridged)
+            inter_A = survivor_matrix(np.kron(A_outer2, np.eye(s)), alive, mode)
+    return intra_A, inter_A
 
 
 def edge_classes(topo: Topology, group_of: Sequence[int] | None = None

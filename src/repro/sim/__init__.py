@@ -13,7 +13,12 @@ churn, topology switches). A mesh-aware engine (pass a
 :class:`~repro.sim.scenarios.MeshSpec` or a WorkerMesh) additionally
 classifies every gossip edge intra-group (ICI) vs cross-group (DCI) and
 charges per-class latency/bandwidth against the exact per-device payload
-the gossip bus ships (``BusLayout.padded_bytes``).
+the gossip bus ships (``BusLayout.padded_bytes``), and runs link-level
+fault windows (:class:`~repro.sim.scenarios.LinkFault` — dead or degraded
+ICI/DCI links, optionally scoped to one pod). The barrier protocols become
+churn-capable with a ``barrier_timeout`` (survivor-renormalized degraded
+commits); scenario builders ``preemption_wave`` / ``regional_outage`` /
+``elastic`` package the robustness worlds.
 
 Entry points: ``repro.train.loop.run_simulated`` (one-call driver) or the
 Engine/Protocol API directly. ``repro.core.straggler.simulate`` is now a thin
@@ -30,13 +35,23 @@ from repro.sim.protocols import (
     SyncGossip,
     TrainExecutor,
 )
-from repro.sim.scenarios import DISTRIBUTIONS, LinkCost, MeshSpec, Scenario
+from repro.sim.scenarios import (
+    DISTRIBUTIONS,
+    LinkCost,
+    LinkFault,
+    MeshSpec,
+    Scenario,
+    elastic,
+    preemption_wave,
+    regional_outage,
+)
 from repro.sim.trace import Trace, TraceRecord, time_to_target
 
 __all__ = [
     "engine", "protocols", "scenarios", "trace",
     "Engine", "Event", "Trace", "TraceRecord", "time_to_target",
-    "Scenario", "DISTRIBUTIONS", "PROTOCOLS", "LinkCost", "MeshSpec",
+    "Scenario", "DISTRIBUTIONS", "PROTOCOLS", "LinkCost", "LinkFault",
+    "MeshSpec", "preemption_wave", "regional_outage", "elastic",
     "SyncGossip", "AsyncPairwise", "StaleGossip", "HierGossip",
     "TrainExecutor", "BatchCache",
 ]

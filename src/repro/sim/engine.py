@@ -34,7 +34,8 @@ import numpy as np
 from repro.core.topology import Topology
 from repro.sim import scenarios as scen_lib
 from repro.sim import trace as trace_lib
-from repro.sim.trace import ARRIVAL, COMPUTE_DONE, FAIL, JOIN, SWITCH
+from repro.sim.trace import (ARRIVAL, COMPUTE_DONE, FAIL, JOIN, LINK_DOWN,
+                             LINK_UP, SWITCH, TIMEOUT)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,7 @@ class Event:
     link_class: str | None = None  # 'ici'|'dci' (mesh-aware ARRIVAL)
     nbytes: int = 0      # payload bytes the link model charged
     wire_time: float = 0.0  # delay the link model charged
+    retried: bool = False  # ARRIVAL delayed past a link-fault window
 
 
 class Engine:
@@ -88,8 +90,15 @@ class Engine:
                 "is 0 — build the MeshSpec with payload_bytes (e.g. "
                 "WorkerMesh.sim_spec(params_template=...)) or go through "
                 "run_simulated, which fills it from the bus layout plan")
+        if self.scenario.has_link_faults and self.mesh is None:
+            raise ValueError(
+                "scenario has link faults but the engine got no mesh — "
+                "pass a MeshSpec/WorkerMesh so edges have a link class")
+        self.scenario.validate_for(
+            self.M, None if self.mesh is None else self.mesh.n_groups)
         self._group = None if self.mesh is None else \
             np.asarray(self.mesh.group_of)
+        self._active_faults: list[scen_lib.LinkFault] = []
         ss = np.random.SeedSequence(self.scenario.seed)
         children = ss.spawn(self.M + 1)
         self.rngs = [np.random.default_rng(s) for s in children[: self.M]]
@@ -107,13 +116,13 @@ class Engine:
     def schedule(self, time: float, kind: str, worker: int, *, src: int = -1,
                  round: int = 0, payload: Any = None,
                  link_class: str | None = None, nbytes: int = 0,
-                 wire_time: float = 0.0) -> Event:
+                 wire_time: float = 0.0, retried: bool = False) -> Event:
         if time < self.clock:
             raise ValueError(f"cannot schedule into the past ({time} < {self.clock})")
         epoch = int(self.epoch[worker]) if worker >= 0 else 0
         ev = Event(time, next(self._seq), kind, worker, src=src, round=round,
                    epoch=epoch, payload=payload, link_class=link_class,
-                   nbytes=nbytes, wire_time=wire_time)
+                   nbytes=nbytes, wire_time=wire_time, retried=retried)
         heapq.heappush(self._heap, (ev.time, ev.seq, ev))
         return ev
 
@@ -121,13 +130,42 @@ class Engine:
              payload: Any = None) -> Event:
         """Ship one gossip message src→dst: draw the link delay (per-class
         on a mesh-aware engine) and schedule the ARRIVAL, annotated with the
-        link class + payload bytes the cost model charged."""
+        link class + payload bytes the cost model charged.
+
+        Active link faults apply on top of the drawn delay: a DOWN window
+        holds the message until the link recovers (delivery at
+        ``recovery + delay``, marked ``retried``); degraded windows multiply
+        the delay by their factor. The delay draw itself always happens at
+        send time on the sender's stream, so fault windows shift deliveries
+        without perturbing any worker's RNG sequence."""
         d = self.link_delay(src, dst)
+        cls = self.link_class(src, dst)
+        retried = False
+        if self._active_faults:
+            down_until = None
+            for f in self._active_faults:
+                if f.link_class != cls:
+                    continue
+                if f.pod is not None and self._group[src] != f.pod \
+                        and self._group[dst] != f.pod:
+                    continue
+                if f.factor is None:
+                    down_until = f.end if down_until is None \
+                        else max(down_until, f.end)
+                else:
+                    d *= f.factor
+            if down_until is not None and down_until > self.clock:
+                retried = True
+                t = down_until + d
+            else:
+                t = self.clock + d
+        else:
+            t = self.clock + d
         return self.schedule(
-            self.clock + d, ARRIVAL, dst, src=src, round=round,
-            payload=payload, link_class=self.link_class(src, dst),
+            t, ARRIVAL, dst, src=src, round=round,
+            payload=payload, link_class=cls,
             nbytes=self.mesh.payload_bytes if self.mesh is not None else 0,
-            wire_time=d)
+            wire_time=t - self.clock, retried=retried)
 
     def _preload_environment_events(self) -> None:
         for t, w, kind in self.scenario.churn:
@@ -136,6 +174,20 @@ class Engine:
             if topo.M != self.M:
                 raise ValueError("topology switch must preserve worker count")
             self.schedule(t, SWITCH, -1, payload=topo)
+        for f in self.scenario.link_faults:
+            # worker -1 (no epoch guard); src carries the pod scope (-1 = all)
+            pod = -1 if f.pod is None else f.pod
+            if f.start <= 0.0:
+                # active from the first send (protocol.start() broadcasts
+                # before the event loop pops anything at t=0)
+                self._active_faults.append(f)
+                self.schedule(0.0, LINK_DOWN, -1, src=pod, payload=None,
+                              link_class=f.link_class)
+            else:
+                self.schedule(f.start, LINK_DOWN, -1, src=pod, payload=f,
+                              link_class=f.link_class)
+            self.schedule(f.end, LINK_UP, -1, src=pod, payload=f,
+                          link_class=f.link_class)
 
     # -- stochastic draws (per-worker streams) ----------------------------
 
@@ -182,11 +234,22 @@ class Engine:
           round (the queue then drains naturally).
         max_events / max_time: hard stops for open-ended scenarios.
         """
-        if (self.scenario.has_churn or self.scenario.has_switches) and \
+        if self.scenario.has_churn and \
                 not getattr(protocol, "supports_churn", False):
             raise NotImplementedError(
-                f"protocol {type(protocol).__name__} does not support "
-                "churn/topology-switch scenarios (use async or stale gossip)")
+                f"protocol {getattr(protocol, 'name', type(protocol).__name__)} "
+                "does not support churn in its current configuration — "
+                "construct it with a barrier deadline "
+                "(SyncGossip/HierGossip(barrier_timeout=...) or "
+                "run_simulated(..., barrier_timeout=...)) to enable the "
+                "timeout/degrade path, or use the async/stale protocols "
+                "(churn-capable natively)")
+        if self.scenario.has_switches and \
+                not getattr(protocol, "supports_switches", False):
+            raise NotImplementedError(
+                f"protocol {getattr(protocol, 'name', type(protocol).__name__)} "
+                "binds its neighbor lists at start and does not support "
+                "topology-switch scenarios — use the async/stale protocols")
         protocol.bind(self, stop_round=until_round)
         protocol.start()
         processed = 0
@@ -196,7 +259,7 @@ class Engine:
             _, _, ev = heapq.heappop(self._heap)
             if max_time is not None and ev.time > max_time:
                 break
-            if ev.kind in (COMPUTE_DONE, ARRIVAL) and \
+            if ev.kind in (COMPUTE_DONE, ARRIVAL, TIMEOUT) and \
                     ev.epoch != self.epoch[ev.worker]:
                 continue  # cancelled by a FAIL/JOIN since it was scheduled
             self.clock = ev.time
@@ -208,12 +271,23 @@ class Engine:
                 self.epoch[ev.worker] += 1
             elif ev.kind == SWITCH:
                 self.topology = ev.payload
+            elif ev.kind == LINK_DOWN:
+                if ev.payload is not None:  # t<=0 faults pre-activated
+                    self._active_faults.append(ev.payload)
+            elif ev.kind == LINK_UP:
+                self._active_faults.remove(ev.payload)
             info = protocol.handle(ev) or {}
+            if info.get("skip"):
+                # a no-op event (e.g. a TIMEOUT whose barrier had already
+                # completed) — not recorded, so fault-free traces keep their
+                # pre-fault-tolerance signatures bit-identical
+                continue
             self.trace.record(trace_lib.TraceRecord(
                 seq=ev.seq, t=ev.time, kind=ev.kind, worker=ev.worker,
                 src=ev.src, round=ev.round, loss=info.get("loss"),
                 link_class=ev.link_class, nbytes=ev.nbytes,
-                wire_time=ev.wire_time))
+                wire_time=ev.wire_time,
+                retried=ev.retried or bool(info.get("failed"))))
             processed += 1
         self.trace.meta.update({
             "scenario": self.scenario.describe(),

@@ -40,7 +40,8 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.sim.trace import ARRIVAL, COMPUTE_DONE, FAIL, JOIN, SWITCH
+from repro.sim.trace import (ARRIVAL, COMPUTE_DONE, FAIL, JOIN, SWITCH,
+                             TIMEOUT)
 
 PyTree = Any
 
@@ -169,7 +170,6 @@ class Protocol:
     """Engine-facing protocol interface; see module docstring."""
 
     name = "protocol"
-    supports_churn = False
 
     def __init__(self, executor: TrainExecutor | None = None, *,
                  eval_fn: Callable[[PyTree], float] | None = None,
@@ -180,6 +180,22 @@ class Protocol:
         self.engine = None
         self.stop_round: int | None = None
         self.rounds: np.ndarray | None = None
+        # optional train/loop RecoveryPolicy manager (fault injection,
+        # retry/backoff, checkpoint-backed restore) — wired by run_simulated
+        self.recovery = None
+
+    @property
+    def supports_churn(self) -> bool:
+        """Whether fail/join scenarios are runnable with the protocol's
+        CURRENT configuration (a property, not a class constant — the
+        barrier protocols derive it from their timeout knob)."""
+        return False
+
+    @property
+    def supports_switches(self) -> bool:
+        """Whether mid-run topology switches are supported (the barrier
+        protocols bind their neighbor lists at start and are not)."""
+        return False
 
     def bind(self, engine, stop_round: int | None = None) -> None:
         self.engine = engine
@@ -197,9 +213,33 @@ class Protocol:
     def _past_stop(self, k: int) -> bool:
         return self.stop_round is not None and k > self.stop_round
 
+    def _maybe_fail_step(self, j: int, k: int) -> dict | None:
+        """Fault-injection gate at a COMPUTE_DONE: asks the recovery manager
+        whether worker j's round-k step attempt fails. On failure the retry
+        is rescheduled after the policy's backoff (or the worker's state is
+        restored from the last consensus checkpoint once retries exhaust —
+        then the step proceeds) and the failed attempt is traced with the
+        ``retried`` flag. Returns None to proceed with the commit."""
+        if self.recovery is None or self.executor is None:
+            return None
+        delay = self.recovery.step_failure_delay(j, k)
+        if delay is None:
+            return None
+        eng = self.engine
+        eng.schedule(eng.clock + delay, COMPUTE_DONE, j, round=k)
+        return {"failed": True}
+
+    def _after_commit(self, j: int, k: int) -> None:
+        if self.recovery is not None and self.executor is not None:
+            self.recovery.after_commit(j, k)
+
     def _accumulate_round_eval(self, j: int, k: int) -> None:
-        """Round-synchronous eval (barrier protocols): once every worker has
-        committed round k, record eval_fn(mean params) at the mean clock.
+        """Round-synchronous eval (barrier protocols): once every worker
+        still expected to reach round k has committed it, record
+        eval_fn(mean of the contributors' params) at their mean commit
+        clock. Dead workers don't gate the round, so the eval curve keeps
+        flowing under churn; with a full live fleet the trigger coincides
+        with the pre-churn "all M committed" condition (bit-identical).
         eval_every: 0 disables, n evaluates every n-th round."""
         if self.eval_fn is None or self.eval_every <= 0 or k % self.eval_every:
             return
@@ -209,12 +249,156 @@ class Protocol:
         acc[0] += 1
         acc[1] += eng.clock
         acc[2] = w_j if acc[2] is None else ex.apply(acc[2], w_j)
-        if acc[0] == eng.M:
-            import jax
+        pending = eng.alive & (self.rounds < k)
+        pending[j] = False          # the caller is committing round k now
+        if not pending.any():
+            self._flush_round_eval(k)
 
-            mean = jax.tree.map(lambda x: x / eng.M, acc[2])
-            eng.trace.record_eval(acc[1] / eng.M, k, float(self.eval_fn(mean)))
-            del self._round_acc[k]
+    def _flush_round_eval(self, k: int) -> None:
+        """Record the accumulated round-k eval (mean of contributors)."""
+        acc = self._round_acc.pop(k, None)
+        if not acc or acc[0] == 0:
+            return
+        import jax
+
+        n = acc[0]
+        mean = jax.tree.map(lambda x: x / n, acc[2])
+        self.engine.trace.record_eval(acc[1] / n, k,
+                                      float(self.eval_fn(mean)))
+
+
+# ---------------------------------------------------------------------------
+# Shared machinery of the local-barrier protocols (sync / hier)
+# ---------------------------------------------------------------------------
+
+
+class _BarrierGossip(Protocol):
+    """Snapshot ref-counting plus the optional timeout/degrade path that
+    makes a local barrier churn-capable.
+
+    With ``barrier_timeout=None`` (the default) the barrier is strict —
+    behaviour is bit-identical to the fault-oblivious protocol, and churn
+    scenarios are rejected by the engine. With a deadline, a worker whose
+    round-k barrier has not completed ``barrier_timeout`` after the worker
+    became ready commits over the in-neighbor snapshots that *did* arrive,
+    mixing with the survivor-repaired weight column
+    (:func:`repro.core.topology.survivor_column`, ``degrade_mode``
+    ``'reabsorb'`` | ``'renormalize'``). Timeout timers are only armed when
+    the scenario can actually stall a barrier (churn or link faults), so a
+    fault-free run keeps its pre-fault-tolerance trace signature — seq
+    numbers included — even when a deadline is configured."""
+
+    def __init__(self, executor: TrainExecutor | None = None, *,
+                 eval_fn: Callable[[PyTree], float] | None = None,
+                 eval_every: int = 0,
+                 barrier_timeout: float | None = None,
+                 degrade_mode: str = "reabsorb"):
+        super().__init__(executor, eval_fn=eval_fn, eval_every=eval_every)
+        if barrier_timeout is not None and not barrier_timeout > 0.0:
+            raise ValueError(
+                f"barrier_timeout must be positive, got {barrier_timeout}")
+        if degrade_mode not in ("reabsorb", "renormalize"):
+            raise ValueError(
+                f"degrade_mode must be 'reabsorb' or 'renormalize', "
+                f"got {degrade_mode!r}")
+        self.barrier_timeout = barrier_timeout
+        self.degrade_mode = degrade_mode
+
+    @property
+    def supports_churn(self) -> bool:
+        return self.barrier_timeout is not None
+
+    def bind(self, engine, stop_round=None):
+        super().bind(engine, stop_round)
+        self._arrived: dict[tuple[int, int], set[int]] = {}
+        self._started: set[tuple[int, int]] = set()
+        self._degraded: set[tuple[int, int]] = set()
+        self._armed: set[tuple[int, int]] = set()
+        self._bcast: set[tuple[int, int]] = set()
+        self._snaps: dict[tuple[int, int], PyTree] = {}
+        # (worker, round) -> consumers that have not yet released the snap
+        self._refs: dict[tuple[int, int], set[int]] = {}
+        scen = engine.scenario
+        self._timeouts_active = self.barrier_timeout is not None and \
+            (scen.has_churn or scen.has_link_faults)
+
+    # -- snapshot bookkeeping ---------------------------------------------
+
+    def _release_snap(self, i: int, k: int, consumer: int) -> None:
+        refs = self._refs.get((i, k))
+        if refs is None:
+            return
+        refs.discard(consumer)
+        if not refs:
+            del self._refs[(i, k)], self._snaps[(i, k)]
+
+    # -- timeout / degrade ------------------------------------------------
+
+    def _arm_timeout(self, j: int, k: int) -> None:
+        """Arm the round-k barrier deadline for worker j (no-op when
+        timeouts are inactive, the round already started, or past stop)."""
+        if not self._timeouts_active or self._past_stop(k) or \
+                (j, k) in self._started or (j, k) in self._armed:
+            return
+        eng = self.engine
+        eng.schedule(eng.clock + self.barrier_timeout, TIMEOUT, j, round=k)
+        self._armed.add((j, k))
+
+    def _handle_timeout(self, j: int, k: int) -> dict | None:
+        """Barrier deadline fired: if worker j is still waiting to start
+        round k, start the compute in *degraded* mode (commit will mix over
+        whatever snapshots arrived). Deadlines that were overtaken by the
+        barrier completing are skipped without being traced."""
+        self._armed.discard((j, k))
+        eng = self.engine
+        if self._past_stop(k) or (j, k) in self._started or \
+                self.rounds[j] != k - 1 or not eng.alive[j]:
+            return {"skip": True}
+        self._degraded.add((j, k))
+        eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
+                     round=k)
+        self._started.add((j, k))
+        return None
+
+    # -- churn ------------------------------------------------------------
+
+    def _handle_fail(self, f: int) -> None:
+        """Worker f died: cancel its barrier bookkeeping and release its
+        claims on neighbor snapshots (it will never consume them). Its own
+        already-broadcast snapshots stay — surviving consumers still mix
+        them. Round-eval accumulators f was the last holdout of are
+        flushed so the eval curve keeps flowing."""
+        for key in [key for key in self._started if key[0] == f]:
+            self._started.discard(key)
+        for key in [key for key in self._degraded if key[0] == f]:
+            self._degraded.discard(key)
+        for key in [key for key in self._armed if key[0] == f]:
+            self._armed.discard(key)
+        for (i, k) in list(self._refs):
+            self._release_snap(i, k, f)
+        for k in sorted(self._round_acc):
+            pending = self.engine.alive & (self.rounds < k)
+            if not pending.any():
+                self._flush_round_eval(k)
+
+    def _handle_join(self, j: int) -> None:
+        """Worker j rejoined: fast-forward it to the live fleet's furthest
+        round (its parameters are restored from the last consensus
+        checkpoint by the recovery manager, when one is attached), announce
+        its estimate to its out-neighbors, and rejoin the barrier."""
+        r = int(self.rounds[j])
+        alive = self.engine.alive
+        if alive.any():
+            r = max(r, int(self.rounds[alive].max()))
+        for key in [key for key in self._arrived
+                    if key[0] == j and key[1] < r]:
+            del self._arrived[key]
+        self.rounds[j] = r
+        if self.recovery is not None and self.executor is not None:
+            self.recovery.on_rejoin(j)
+        self._broadcast(j, r)          # idempotent via the _bcast guard
+        self._maybe_start(j, r + 1)
+        self._arm_timeout(j, r + 1)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +406,7 @@ class Protocol:
 # ---------------------------------------------------------------------------
 
 
-class SyncGossip(Protocol):
+class SyncGossip(_BarrierGossip):
     """w_j(k+1) = Σ_i A_ij w_i(k) − η g_j(w_j(k)); round k+1 starts at
     max_{i∈N_j∪{j}} t_i(k) (+ link delay) — the paper's time recursion.
 
@@ -231,43 +415,56 @@ class SyncGossip(Protocol):
     price of the bit-match guarantee (the sim executes the *identical*
     compiled step the train loop runs); it is deliberate and sized for
     simulation-scale problems. Timing-only mode (``executor=None``) skips
-    all value work and runs at ~50k events/s."""
+    all value work and runs at ~50k events/s.
+
+    ``barrier_timeout`` (see :class:`_BarrierGossip`) makes the barrier
+    churn-capable: a timed-out round commits over the arrived snapshots
+    with the survivor-repaired column of A."""
 
     name = "sync"
-    supports_churn = False
 
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
         topo = engine.topology
         self._in_nb = [set(map(int, topo.neighbors_in(j))) for j in range(engine.M)]
         self._out_nb = [list(map(int, topo.neighbors_out(j))) for j in range(engine.M)]
-        self._arrived: dict[tuple[int, int], set[int]] = {}
-        self._started: set[tuple[int, int]] = set()
-        self._snaps: dict[tuple[int, int], PyTree] = {}
-        self._refs: dict[tuple[int, int], int] = {}
 
     def start(self):
         for j in range(self.engine.M):
             self._broadcast(j, 0)
         for j in range(self.engine.M):
             self._maybe_start(j, 1)  # covers in-degree-0 nodes
+        for j in range(self.engine.M):
+            self._arm_timeout(j, 1)
 
     def handle(self, ev):
         if ev.kind == ARRIVAL:
+            if ev.round < self.rounds[ev.worker]:
+                return None  # late arrival for a round already committed
+                             # (possible only after a timeout/rejoin)
             self._arrived.setdefault((ev.worker, ev.round), set()).add(ev.src)
             self._maybe_start(ev.worker, ev.round + 1)
             return None
         if ev.kind == COMPUTE_DONE:
             return self._complete(ev.worker, ev.round)
+        if ev.kind == TIMEOUT:
+            return self._handle_timeout(ev.worker, ev.round)
+        if ev.kind == FAIL:
+            self._handle_fail(ev.worker)
+        elif ev.kind == JOIN:
+            self._handle_join(ev.worker)
         return None
 
     def _broadcast(self, j: int, k: int) -> None:
         eng = self.engine
         if self._past_stop(k + 1):
             return  # nobody will consume round-k estimates past the stop
+        if (j, k) in self._bcast:
+            return  # a rejoin re-announce raced a normal broadcast
+        self._bcast.add((j, k))
         if self.executor is not None and self._out_nb[j]:
             self._snaps[(j, k)] = self.executor.get_slice(self.executor.W, j)
-            self._refs[(j, k)] = len(self._out_nb[j])
+            self._refs[(j, k)] = set(self._out_nb[j])
         for o in self._out_nb[j]:
             eng.send(j, o, round=k)
 
@@ -282,35 +479,70 @@ class SyncGossip(Protocol):
         self._started.add((j, k))
 
     def _complete(self, j: int, k: int) -> dict:
+        failed = self._maybe_fail_step(j, k)
+        if failed is not None:
+            return failed
         loss = self._commit(j, k) if self.executor is not None else None
         self.rounds[j] = k
         self._arrived.pop((j, k - 1), None)
+        self._started.discard((j, k))
+        self._degraded.discard((j, k))
         self._broadcast(j, k)
         self._maybe_start(j, k + 1)
+        self._arm_timeout(j, k + 1)
+        self._after_commit(j, k)
         return {"loss": loss}
 
     def _commit(self, j: int, k: int) -> float:
-        """Run the real train step for round k and commit worker j's slice."""
+        """Run the real train step for round k and commit worker j's slice.
+
+        Full barrier (every in-neighbor snapshot arrived — the only case in
+        a fault-free run): the exact ``make_train_step`` program, bit-
+        matching the non-simulated loop. Degraded (a timeout fired with
+        snapshots missing): per-slice grad at w_j(k-1), mix over the
+        arrived set with the survivor-repaired column, add the update."""
         import jax.numpy as jnp
 
         from repro.core.decentralized import TrainState
+        from repro.core.topology import survivor_column
 
-        ex = self.executor
-        # Assemble the round-(k-1) estimate stack as seen by worker j: its
-        # own current slice + the in-neighbor snapshots that arrived. Rows
-        # with zero consensus weight may be mid-round; they contribute ±0.0.
-        S = ex.W
+        ex, eng = self.executor, self.engine
+        arrived = self._arrived.get((j, k - 1), set())
+        have = {i for i in self._in_nb[j]
+                if i in arrived and (i, k - 1) in self._snaps}
+        if self._in_nb[j] <= have:
+            # Assemble the round-(k-1) estimate stack as seen by worker j:
+            # its own current slice + the in-neighbor snapshots that
+            # arrived. Rows with zero consensus weight may be mid-round;
+            # they contribute ±0.0.
+            S = ex.W
+            for i in self._in_nb[j]:
+                S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+            state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
+            new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
+            ex.W = ex.set_slice(ex.W, j, ex.get_slice(new_state.params, j))
+            ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
+            loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
+        else:
+            w_start = ex.get_slice(ex.W, j)
+            l, g = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
+            u, opt_j = ex.update_slice(g, ex.get_slice(ex.opt, j),
+                                       w_start, k - 1)
+            keep = np.ones(eng.M, dtype=bool)
+            S = ex.W
+            for i in self._in_nb[j]:
+                if i in have:
+                    S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+                else:
+                    keep[i] = False
+            col = survivor_column(np.array(eng.topology.A[:, j]), j, keep,
+                                  self.degrade_mode)
+            mixed = ex.mix_column(S, col)
+            ex.W = ex.set_slice(ex.W, j, ex.apply(mixed, u))
+            ex.opt = ex.set_slice(ex.opt, j, opt_j)
+            loss = float(l)
         for i in self._in_nb[j]:
-            S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
-        state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
-        new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
-        ex.W = ex.set_slice(ex.W, j, ex.get_slice(new_state.params, j))
-        ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
-        for i in self._in_nb[j]:
-            self._refs[(i, k - 1)] -= 1
-            if self._refs[(i, k - 1)] == 0:
-                del self._refs[(i, k - 1)], self._snaps[(i, k - 1)]
-        loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
+            self._release_snap(i, k - 1, j)
         self._accumulate_round_eval(j, k)
         return loss
 
@@ -326,7 +558,14 @@ class AsyncPairwise(Protocol):
     in-flight averaging (gradients are stale by one communication)."""
 
     name = "async"
-    supports_churn = True
+
+    @property
+    def supports_churn(self) -> bool:
+        return True
+
+    @property
+    def supports_switches(self) -> bool:
+        return True
 
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
@@ -348,6 +587,8 @@ class AsyncPairwise(Protocol):
                 self.executor.pair_average(i, j)
             return None
         if ev.kind == JOIN:
+            if self.recovery is not None and self.executor is not None:
+                self.recovery.on_rejoin(ev.worker)
             self._begin(ev.worker)
         elif ev.kind == FAIL:
             self._pending.pop(ev.worker, None)
@@ -364,6 +605,9 @@ class AsyncPairwise(Protocol):
                      round=k)
 
     def _complete(self, j: int, k: int) -> dict:
+        failed = self._maybe_fail_step(j, k)
+        if failed is not None:
+            return failed  # _pending[j] survives for the retried attempt
         eng, ex = self.engine, self.executor
         loss = None
         if ex is not None:
@@ -380,6 +624,7 @@ class AsyncPairwise(Protocol):
             eng.send(j, partner, round=k)
         self._begin(j)
         self._periodic_eval()
+        self._after_commit(j, k)
         return {"loss": loss}
 
     def _periodic_eval(self) -> None:
@@ -404,7 +649,14 @@ class StaleGossip(Protocol):
     broadcasts, and immediately starts the next round — no barrier."""
 
     name = "stale"
-    supports_churn = True
+
+    @property
+    def supports_churn(self) -> bool:
+        return True
+
+    @property
+    def supports_switches(self) -> bool:
+        return True
 
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
@@ -434,6 +686,8 @@ class StaleGossip(Protocol):
                     self._buf[key] = (ev.round, ev.payload)
             return None
         if ev.kind == JOIN:
+            if self.recovery is not None and self.executor is not None:
+                self.recovery.on_rejoin(ev.worker)
             self._begin(ev.worker)
         elif ev.kind == FAIL:
             self._pending.pop(ev.worker, None)
@@ -450,6 +704,9 @@ class StaleGossip(Protocol):
                      round=k)
 
     def _complete(self, j: int, k: int) -> dict:
+        failed = self._maybe_fail_step(j, k)
+        if failed is not None:
+            return failed  # _pending[j] survives for the retried attempt
         eng, ex = self.engine, self.executor
         loss = None
         snapshot = None
@@ -457,12 +714,14 @@ class StaleGossip(Protocol):
             w_start = self._pending.pop(j)
             l, g = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
             u, opt_j = ex.update_slice(g, ex.get_slice(ex.opt, j), w_start, k - 1)
-            # mix over {j} ∪ {arrived in-neighbors}, weights renormalized
+            # mix over {j} ∪ {arrived *live* in-neighbors}, renormalized —
+            # a dead neighbor's last snapshot is dropped, its weight
+            # redistributed by the renormalization
             col = np.array(eng.topology.A[:, j])
             S = ex.W
             for i in map(int, eng.topology.neighbors_in(j)):
                 got = self._buf.get((j, i))
-                if got is None:
+                if got is None or not eng.alive[i]:
                     col[i] = 0.0
                 else:
                     S = ex.set_slice(S, i, got[1])
@@ -477,6 +736,7 @@ class StaleGossip(Protocol):
                 eng.send(j, o, round=k, payload=snapshot)
         self._begin(j)
         self._periodic_eval()
+        self._after_commit(j, k)
         return {"loss": loss}
 
     def _periodic_eval(self) -> None:
@@ -495,7 +755,7 @@ class StaleGossip(Protocol):
 # ---------------------------------------------------------------------------
 
 
-class HierGossip(Protocol):
+class HierGossip(_BarrierGossip):
     """SGP-style two-level gossip (the sim rendering of
     ``core/gossip.hierarchical_mix`` on a pod/DCI mesh, after Assran et al.):
     worker j's round-k barrier covers only its *intra-pod* in-neighbors
@@ -508,10 +768,14 @@ class HierGossip(Protocol):
     with zero DCI penalty the trajectory collapses to the paper's DSM.
 
     Needs pod metadata: a mesh-aware engine (MeshSpec group_of) or a
-    :func:`~repro.core.topology.kronecker`/``hier`` topology."""
+    :func:`~repro.core.topology.kronecker`/``hier`` topology.
+
+    ``barrier_timeout`` (see :class:`_BarrierGossip`) makes the *intra-pod*
+    barrier churn-capable; a timed-out or neighbor-dead round mixes with
+    the survivor-repaired column (dead cross-pod in-neighbors' stale
+    buffers are dropped and their weight reabsorbed too)."""
 
     name = "hier"
-    supports_churn = False
 
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
@@ -533,10 +797,6 @@ class HierGossip(Protocol):
             self._in_inter.append([i for i in ins if g[i] != g[j]])
             self._out_intra.append([o for o in outs if g[o] == g[j]])
             self._out_inter.append([o for o in outs if g[o] != g[j]])
-        self._arrived: dict[tuple[int, int], set[int]] = {}
-        self._started: set[tuple[int, int]] = set()
-        self._snaps: dict[tuple[int, int], PyTree] = {}
-        self._refs: dict[tuple[int, int], int] = {}
         # (dst, src) -> (round, snapshot): latest-arrived cross-pod estimate
         self._stale: dict[tuple[int, int], tuple[int, PyTree]] = {}
 
@@ -551,11 +811,15 @@ class HierGossip(Protocol):
             self._broadcast(j, 0)
         for j in range(eng.M):
             self._maybe_start(j, 1)
+        for j in range(eng.M):
+            self._arm_timeout(j, 1)
 
     def handle(self, ev):
         if ev.kind == ARRIVAL:
             j, i = ev.worker, ev.src
             if self._g[i] == self._g[j]:       # ICI: barrier bookkeeping
+                if ev.round < self.rounds[j]:
+                    return None  # round already committed (timeout/rejoin)
                 self._arrived.setdefault((j, ev.round), set()).add(i)
                 self._maybe_start(j, ev.round + 1)
             elif ev.payload is not None:       # DCI: refresh the stale buffer
@@ -565,18 +829,27 @@ class HierGossip(Protocol):
             return None
         if ev.kind == COMPUTE_DONE:
             return self._complete(ev.worker, ev.round)
+        if ev.kind == TIMEOUT:
+            return self._handle_timeout(ev.worker, ev.round)
+        if ev.kind == FAIL:
+            self._handle_fail(ev.worker)
+        elif ev.kind == JOIN:
+            self._handle_join(ev.worker)
         return None
 
     def _broadcast(self, j: int, k: int) -> None:
         eng, ex = self.engine, self.executor
         if self._past_stop(k + 1):
             return
+        if (j, k) in self._bcast:
+            return  # a rejoin re-announce raced a normal broadcast
+        self._bcast.add((j, k))
         snap = None
         if ex is not None and (self._out_intra[j] or self._out_inter[j]):
             snap = ex.get_slice(ex.W, j)
         if ex is not None and self._out_intra[j]:
             self._snaps[(j, k)] = snap
-            self._refs[(j, k)] = len(self._out_intra[j])
+            self._refs[(j, k)] = set(self._out_intra[j])
         for o in self._out_intra[j]:
             eng.send(j, o, round=k)
         for o in self._out_inter[j]:
@@ -593,34 +866,52 @@ class HierGossip(Protocol):
         self._started.add((j, k))
 
     def _complete(self, j: int, k: int) -> dict:
+        failed = self._maybe_fail_step(j, k)
+        if failed is not None:
+            return failed
         eng, ex = self.engine, self.executor
         loss = None
         if ex is not None:
+            from repro.core.topology import survivor_column
+
             # j's own row is untouched since round k started: w_j(k-1)
             w_start = ex.get_slice(ex.W, j)
             l, grad = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
             u, opt_j = ex.update_slice(grad, ex.get_slice(ex.opt, j),
                                        w_start, k - 1)
-            col = np.array(eng.topology.A[:, j])
+            keep = np.ones(eng.M, dtype=bool)
+            arrived = self._arrived.get((j, k - 1), set())
             S = ex.W
             for i in self._in_intra[j]:
-                S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+                if i in arrived and (i, k - 1) in self._snaps:
+                    S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+                else:
+                    keep[i] = False      # degraded: snapshot never arrived
             for i in self._in_inter[j]:
-                S = ex.set_slice(S, i, self._stale[(j, i)][1])
+                got = self._stale.get((j, i))
+                if got is None or not eng.alive[i]:
+                    keep[i] = False      # dead pod: drop its stale estimate
+                else:
+                    S = ex.set_slice(S, i, got[1])
+            col = np.array(eng.topology.A[:, j])
+            if not keep.all():
+                col = survivor_column(col, j, keep, self.degrade_mode)
             mixed = ex.mix_column(S, col)   # exact weights, stale DCI values
             ex.W = ex.set_slice(ex.W, j, ex.apply(mixed, u))
             ex.opt = ex.set_slice(ex.opt, j, opt_j)
             for i in self._in_intra[j]:
-                self._refs[(i, k - 1)] -= 1
-                if self._refs[(i, k - 1)] == 0:
-                    del self._refs[(i, k - 1)], self._snaps[(i, k - 1)]
+                self._release_snap(i, k - 1, j)
             loss = float(l)
         self.rounds[j] = k
         self._arrived.pop((j, k - 1), None)
+        self._started.discard((j, k))
+        self._degraded.discard((j, k))
         self._broadcast(j, k)
         self._maybe_start(j, k + 1)
+        self._arm_timeout(j, k + 1)
         if ex is not None:
             self._accumulate_round_eval(j, k)
+        self._after_commit(j, k)
         return {"loss": loss}
 
 

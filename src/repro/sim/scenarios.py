@@ -279,6 +279,45 @@ ICI = "ici"
 DCI = "dci"
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkFault:
+    """One link-fault window: a whole edge class (optionally scoped to the
+    edges touching one pod) dies or degrades for ``duration`` virtual time.
+
+    ``factor=None`` means the links are DOWN: messages sent into the window
+    are held and delivered at ``recovery_time + delay`` (the engine marks
+    them ``retried`` in the trace). A finite ``factor`` multiplies the link
+    model's delay instead (degraded links). ``pod`` restricts the fault to
+    edges with at least one endpoint in that mesh group (``None`` = the
+    whole class) — the regional-outage shape."""
+
+    start: float
+    duration: float
+    link_class: str = DCI
+    factor: float | None = None
+    pod: int | None = None
+
+    def __post_init__(self):
+        if self.start < 0:
+            raise ValueError("link fault start must be >= 0")
+        if not self.duration > 0:
+            raise ValueError("link fault duration must be > 0")
+        if self.link_class not in (ICI, DCI):
+            raise ValueError(f"link_class must be {ICI!r}|{DCI!r}, "
+                             f"got {self.link_class!r}")
+        if self.factor is not None and not self.factor > 0:
+            raise ValueError("degrade factor must be > 0 (None = link dead)")
+
+    @property
+    def end(self) -> float:
+        return self.start + self.duration
+
+    def describe(self) -> dict:
+        return {"start": self.start, "duration": self.duration,
+                "link_class": self.link_class, "factor": self.factor,
+                "pod": self.pod}
+
+
 def two_class_links(*, ici_latency: float = 0.0, dci_latency: float = 0.0,
                     ici_bw: float = float("inf"), dci_bw: float = float("inf"),
                     jitter: TimeSampler | None = None) -> dict[str, LinkCost]:
@@ -307,6 +346,7 @@ class Scenario:
     link_classes: dict[str, LinkCost] | None = None
     churn: tuple[ChurnEvent, ...] = ()
     switches: tuple[TopologySwitch, ...] = ()
+    link_faults: tuple[LinkFault, ...] = ()
     seed: int = 0
 
     def __post_init__(self):
@@ -315,10 +355,36 @@ class Scenario:
                 raise ValueError(f"churn kind must be fail|join, got {kind!r}")
             if t < 0:
                 raise ValueError("churn times must be >= 0")
+            # worker ids are validated as far as a Scenario can (it does not
+            # know M — validate_for(M) / the engine close that gap early)
+            if not isinstance(w, (int, np.integer)) or isinstance(w, bool) \
+                    or w < 0:
+                raise ValueError(
+                    f"churn worker id must be a non-negative int, got {w!r}")
         if self.link_classes is not None:
             missing = {ICI, DCI} - set(self.link_classes)
             if missing:
                 raise ValueError(f"link_classes missing {sorted(missing)}")
+        for f in self.link_faults:
+            if not isinstance(f, LinkFault):
+                raise ValueError(f"link_faults entries must be LinkFault, "
+                                 f"got {type(f).__name__}")
+
+    def validate_for(self, M: int, n_groups: int | None = None) -> None:
+        """Range checks that need the fleet size: churn worker ids < M and
+        fault pod ids < n_groups. The engine calls this at construction so a
+        bad id fails loudly up front rather than deep inside the run."""
+        for t, w, kind in self.churn:
+            if w >= M:
+                raise ValueError(
+                    f"churn event ({t}, {w}, {kind!r}) names worker {w} "
+                    f"but the topology has only {M} workers")
+        for f in self.link_faults:
+            if f.pod is not None and n_groups is not None \
+                    and f.pod >= n_groups:
+                raise ValueError(
+                    f"link fault pod {f.pod} out of range — mesh has "
+                    f"{n_groups} groups")
 
     @property
     def has_churn(self) -> bool:
@@ -327,6 +393,10 @@ class Scenario:
     @property
     def has_switches(self) -> bool:
         return bool(self.switches)
+
+    @property
+    def has_link_faults(self) -> bool:
+        return bool(self.link_faults)
 
     def describe(self) -> dict:
         """JSON-able summary (the scenario 'schema' written into traces)."""
@@ -339,6 +409,8 @@ class Scenario:
             "churn": [[t, w, k] for t, w, k in self.churn],
             "switches": [[t, topo.name] for t, topo in self.switches],
         }
+        if self.link_faults:
+            out["link_faults"] = [f.describe() for f in self.link_faults]
         if self.link_classes is not None:
             out["link_classes"] = {c: lc.describe()
                                    for c, lc in sorted(self.link_classes.items())}
@@ -383,6 +455,8 @@ def flaky_workers(M: int, *, fail_times: dict[int, float],
     later (0 = never rejoins)."""
     churn: list[ChurnEvent] = []
     for w, t in sorted(fail_times.items()):
+        if not 0 <= w < M:
+            raise ValueError(f"fail_times names worker {w}, fleet has {M}")
         churn.append((t, w, "fail"))
         if rejoin_after > 0:
             churn.append((t + rejoin_after, w, "join"))
@@ -420,3 +494,68 @@ def datacenter(dist: str = "spark", *, ici_latency: float = 0.02,
                                      dci_latency=dci_latency,
                                      ici_bw=ici_bw, dci_bw=dci_bw),
         seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# The fleet-scale robustness book (ROADMAP: preemption waves, regional
+# outages, elastic join) — churn + link-fault scenarios the fault-tolerant
+# protocols (sync/hier with a barrier timeout, async/stale natively) survive.
+# ---------------------------------------------------------------------------
+
+
+def preemption_wave(M: int, *, start: float = 5.0, interval: float = 1.0,
+                    count: int | None = None, down_for: float = 8.0,
+                    dist: str = "spark", seed: int = 0) -> Scenario:
+    """Spot-instance preemption wave: ``count`` workers (default M//4,
+    evenly spread over the fleet) are killed one after another ``interval``
+    apart from ``start``; each rejoins ``down_for`` later (0 = never)."""
+    count = max(1, M // 4) if count is None else count
+    if not 0 < count <= M:
+        raise ValueError(f"wave of {count} preemptions on a fleet of {M}")
+    stride = max(1, M // count)
+    churn: list[ChurnEvent] = []
+    for i in range(count):
+        w = (i * stride) % M
+        t = start + i * interval
+        churn.append((t, w, "fail"))
+        if down_for > 0:
+            churn.append((t + down_for, w, "join"))
+    churn.sort(key=lambda e: e[0])
+    return Scenario(name=f"preemption_wave-{count}",
+                    compute=sampled(DISTRIBUTIONS[dist]()),
+                    churn=tuple(churn), seed=seed)
+
+
+def regional_outage(*, pod: int, start: float, duration: float,
+                    factor: float | None = None, dist: str = "spark",
+                    ici_latency: float = 0.02, dci_latency: float = 2.0,
+                    ici_bw: float = float("inf"), dci_bw: float = float("inf"),
+                    seed: int = 0, **dist_kw) -> Scenario:
+    """The :func:`datacenter` world with one pod's DCI links failed: every
+    cross-pod message touching ``pod`` is held until ``start + duration``
+    (``factor=None``) or slowed by ``factor`` (degraded region). Workers in
+    the pod stay alive and keep mixing on their ICI links — exactly the
+    regime hierarchical gossip is built to ride through."""
+    base = datacenter(dist, ici_latency=ici_latency, dci_latency=dci_latency,
+                      ici_bw=ici_bw, dci_bw=dci_bw, seed=seed, **dist_kw)
+    fault = LinkFault(start=start, duration=duration, link_class=DCI,
+                      factor=factor, pod=pod)
+    kind = "degraded" if factor is not None else "outage"
+    return dataclasses.replace(base, name=f"regional_{kind}-pod{pod}",
+                               link_faults=(fault,))
+
+
+def elastic(M: int, *, initial: int, start: float = 3.0,
+            interval: float = 2.0, dist: str = "spark",
+            seed: int = 0) -> Scenario:
+    """Elastic scale-up past M₀: workers ``initial..M-1`` are absent from
+    t=0 (failed before doing any work) and join staggered ``interval``
+    apart from ``start`` — the fleet grows from ``initial`` to ``M``."""
+    if not 0 < initial <= M:
+        raise ValueError(f"initial fleet {initial} must be in 1..{M}")
+    churn: list[ChurnEvent] = [(0.0, w, "fail") for w in range(initial, M)]
+    churn += [(start + (w - initial) * interval, w, "join")
+              for w in range(initial, M)]
+    return Scenario(name=f"elastic-{initial}to{M}",
+                    compute=sampled(DISTRIBUTIONS[dist]()),
+                    churn=tuple(churn), seed=seed)

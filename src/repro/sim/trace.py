@@ -28,6 +28,9 @@ ARRIVAL = "arrival"
 FAIL = "fail"
 JOIN = "join"
 SWITCH = "switch"
+TIMEOUT = "timeout"        # barrier deadline fired (churn-capable sync/hier)
+LINK_DOWN = "link_down"    # a link-class fault window opens (src = pod|-1)
+LINK_UP = "link_up"        # the fault window closes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +45,9 @@ class TraceRecord:
     link_class: str | None = None  # 'ici' | 'dci' (mesh-aware ARRIVAL only)
     nbytes: int = 0     # message payload bytes charged on that link
     wire_time: float = 0.0  # delay the link model charged for this message
+    retried: bool = False  # ARRIVAL held by a dead link and re-delivered
+                           # after recovery, or a COMPUTE_DONE attempt that
+                           # the fault-injection hook failed (retried later)
 
     def as_tuple(self) -> tuple:
         """Schedule identity — deliberately EXCLUDES the link-class
@@ -51,7 +57,8 @@ class TraceRecord:
                 self.round, self.loss)
 
     def as_row(self) -> tuple:
-        return self.as_tuple() + (self.link_class, self.nbytes, self.wire_time)
+        return self.as_tuple() + (self.link_class, self.nbytes,
+                                  self.wire_time, int(self.retried))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,18 +133,41 @@ class Trace:
 
     def link_accounting(self) -> dict[str, dict[str, float]]:
         """Per-link-class totals over all delivered messages (mesh-aware
-        runs): message count, total payload bytes shipped, and total wire
-        time the scenario's :class:`~repro.sim.scenarios.LinkCost` charged.
-        Meshless runs (no class annotations) return an empty dict."""
+        runs): message count, total payload bytes shipped, total wire time
+        the scenario's :class:`~repro.sim.scenarios.LinkCost` charged, plus
+        the fault-tolerance view — retried messages/bytes (deliveries held
+        by a dead link until it recovered) and ``downtime`` (summed
+        LINK_DOWN→LINK_UP window lengths of that class, open windows closed
+        at the last trace time). Meshless runs (no class annotations) return
+        an empty dict."""
         out: dict[str, dict[str, float]] = {}
+
+        def acc(cls: str) -> dict[str, float]:
+            return out.setdefault(cls, {
+                "messages": 0, "bytes": 0.0, "time": 0.0,
+                "retried_messages": 0, "retried_bytes": 0.0,
+                "downtime": 0.0})
+
+        open_down: dict[tuple[str, int], list[float]] = {}
+        t_last = self.records[-1].t if self.records else 0.0
         for r in self.records:
-            if r.kind != ARRIVAL or r.link_class is None:
-                continue
-            acc = out.setdefault(r.link_class,
-                                 {"messages": 0, "bytes": 0.0, "time": 0.0})
-            acc["messages"] += 1
-            acc["bytes"] += r.nbytes
-            acc["time"] += r.wire_time
+            if r.kind == LINK_DOWN and r.link_class is not None:
+                open_down.setdefault((r.link_class, r.src), []).append(r.t)
+            elif r.kind == LINK_UP and r.link_class is not None:
+                starts = open_down.get((r.link_class, r.src))
+                if starts:
+                    acc(r.link_class)["downtime"] += r.t - starts.pop(0)
+            elif r.kind == ARRIVAL and r.link_class is not None:
+                a = acc(r.link_class)
+                a["messages"] += 1
+                a["bytes"] += r.nbytes
+                a["time"] += r.wire_time
+                if r.retried:
+                    a["retried_messages"] += 1
+                    a["retried_bytes"] += r.nbytes
+        for (cls, _), starts in open_down.items():
+            for t0 in starts:
+                acc(cls)["downtime"] += t_last - t0
         return out
 
     # -- persistence / identity ------------------------------------------
@@ -171,13 +201,14 @@ class Trace:
         tr = cls(d["M"])
         tr.meta = d.get("meta", {})
         for row in d["events"]:
-            # rows are 7-wide (pre-mesh traces) or 10-wide (link-class cols)
+            # rows are 7-wide (pre-mesh), 10-wide (link-class cols), or
+            # 11-wide (retried flag) — older traces stay loadable
             seq, t, kind, worker, src, rnd, loss = row[:7]
-            cls_, nbytes, wire = (row[7:] + [None, 0, 0.0])[:3] \
-                if len(row) > 7 else (None, 0, 0.0)
+            cls_, nbytes, wire, retried = \
+                (list(row[7:]) + [None, 0, 0.0, 0])[:4]
             tr.record(TraceRecord(seq, t, kind, worker, src, rnd, loss,
                                   link_class=cls_, nbytes=nbytes,
-                                  wire_time=wire))
+                                  wire_time=wire, retried=bool(retried)))
         for t, rnd, v in d.get("evals", []):
             tr.record_eval(t, rnd, v)
         return tr

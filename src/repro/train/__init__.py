@@ -1,4 +1,6 @@
 from repro.train import checkpoint, loop
-from repro.train.loop import History, SimRun, run_simulated, train
+from repro.train.loop import (History, RecoveryPolicy, SimRun,
+                             run_simulated, train)
 
-__all__ = ["checkpoint", "loop", "History", "train", "SimRun", "run_simulated"]
+__all__ = ["checkpoint", "loop", "History", "train", "SimRun",
+           "run_simulated", "RecoveryPolicy"]

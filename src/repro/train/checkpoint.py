@@ -11,6 +11,7 @@ import collections
 import concurrent.futures
 import json
 import os
+import time
 from typing import Any
 
 import jax
@@ -182,6 +183,14 @@ class AsyncCheckpointWriter:
     first waits on the oldest (bounded snapshot memory). ``wait()`` drains
     the queue and re-raises any writer-thread exception.
 
+    Transient IO errors (``OSError`` from the filesystem — full disk that
+    drains, flaky network mount) are retried up to ``io_retries`` times with
+    exponential backoff starting at ``io_backoff`` seconds. A write that
+    exhausts its retries puts the writer in *terminal failure*: the error
+    surfaces on the next ``save()`` (as well as on ``wait()``/``close()``),
+    so a training loop cannot silently keep running while every checkpoint
+    is lost.
+
     ``save(..., wmesh=…)`` (or any non-None ``wmesh``-like sentinel) routes
     the write through :func:`save_sharded`: the background thread pulls ONE
     worker slice of the device-side snapshot at a time and writes per-shard
@@ -189,23 +198,44 @@ class AsyncCheckpointWriter:
     never funnels through host RAM in full.
     """
 
-    def __init__(self, max_pending: int = 2):
+    def __init__(self, max_pending: int = 2, *, io_retries: int = 3,
+                 io_backoff: float = 0.05):
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="ckpt-writer")
         self._pending: collections.deque = collections.deque()
         self._max_pending = max(1, max_pending)
+        self._io_retries = max(1, int(io_retries))
+        self._io_backoff = io_backoff
+        self._terminal: BaseException | None = None
+
+    def _write(self, fn, *args, **kw):
+        delay = self._io_backoff
+        for attempt in range(self._io_retries):
+            try:
+                return fn(*args, **kw)
+            except OSError as e:
+                if attempt == self._io_retries - 1:
+                    self._terminal = e
+                    raise
+                time.sleep(delay)
+                delay *= 2
 
     def save(self, path: str, tree: PyTree, step: int | None = None, *,
              wmesh=None, sharded: bool = False) -> None:
+        if self._terminal is not None:
+            raise RuntimeError(
+                f"checkpoint writer failed terminally after "
+                f"{self._io_retries} attempts: {self._terminal}"
+            ) from self._terminal
         snap = jax.tree.map(
             lambda x: x.copy() if hasattr(x, "copy") else x, tree)
         while len(self._pending) >= self._max_pending:
             self._pending.popleft().result()
         if sharded or wmesh is not None:
-            fut = self._pool.submit(save_sharded, path, snap, step,
-                                    wmesh=wmesh)
+            fut = self._pool.submit(self._write, save_sharded, path, snap,
+                                    step, wmesh=wmesh)
         else:
-            fut = self._pool.submit(save, path, snap, step)
+            fut = self._pool.submit(self._write, save, path, snap, step)
         self._pending.append(fut)
 
     def wait(self) -> None:

@@ -176,6 +176,125 @@ class _nullcontext:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """How a simulated fleet responds to step failures and rejoins.
+
+    A failed step attempt (the ``fault_inject`` hook of
+    :func:`run_simulated`) is retried after exponential backoff
+    (``backoff_base * backoff_factor**attempt`` virtual seconds) up to
+    ``max_retries`` times; once retries exhaust, the worker's parameter
+    slice is restored — from the consensus average of the last checkpoint
+    when ``ckpt_path`` is set and one has landed, else from the live
+    fleet's current mean — and the step proceeds from the restored state.
+    Rejoining workers (churn JOIN events) restore the same way. With
+    ``ckpt_path`` set, the stacked state is checkpointed through the
+    :class:`~repro.train.checkpoint.AsyncCheckpointWriter` every
+    ``ckpt_every`` commits (sharded per worker when ``ckpt_sharded``).
+    """
+
+    max_retries: int = 3
+    backoff_base: float = 0.5
+    backoff_factor: float = 2.0
+    ckpt_path: str | None = None
+    ckpt_every: int = 10
+    ckpt_sharded: bool = True
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if not self.backoff_base > 0:
+            raise ValueError(f"backoff_base must be positive, got {self.backoff_base}")
+        if not self.backoff_factor >= 1.0:
+            raise ValueError(f"backoff_factor must be >= 1, got {self.backoff_factor}")
+        if self.ckpt_every <= 0:
+            raise ValueError(f"ckpt_every must be positive, got {self.ckpt_every}")
+
+
+class _RecoveryManager:
+    """Wires a :class:`RecoveryPolicy` into a sim protocol (its ``recovery``
+    attribute): answers the per-attempt failure/backoff question, writes
+    periodic consensus checkpoints, and restores failed/rejoining workers."""
+
+    def __init__(self, policy: RecoveryPolicy, executor,
+                 fault_inject: Callable[[int, int, int], bool] | None = None):
+        self.policy = policy
+        self.executor = executor
+        self.fault_inject = fault_inject
+        self.engine = None   # set by run_simulated once the Engine exists
+        self.attempts: dict[tuple[int, int], int] = {}
+        self.stats = {"step_failures": 0, "retries": 0, "restores": 0,
+                      "rejoins": 0, "checkpoints": 0}
+        self.writer = ckpt_lib.AsyncCheckpointWriter() \
+            if policy.ckpt_path else None
+        self._saved_any = False
+        self._commits = 0
+
+    # -- protocol hooks ---------------------------------------------------
+
+    def step_failure_delay(self, j: int, k: int) -> float | None:
+        """None → the attempt proceeds; a float → this attempt failed,
+        retry after that many virtual seconds. Exhausted retries restore
+        worker j and let the attempt proceed from the restored state."""
+        if self.fault_inject is None:
+            return None
+        a = self.attempts.get((j, k), 0)
+        if not self.fault_inject(j, k, a):
+            self.attempts.pop((j, k), None)
+            return None
+        self.stats["step_failures"] += 1
+        a += 1
+        self.attempts[(j, k)] = a
+        if a <= self.policy.max_retries:
+            self.stats["retries"] += 1
+            return self.policy.backoff_base * \
+                self.policy.backoff_factor ** (a - 1)
+        self.attempts.pop((j, k), None)
+        self._restore(j)
+        return None
+
+    def after_commit(self, j: int, k: int) -> None:
+        if self.writer is None:
+            return
+        self._commits += 1
+        if self._commits % self.policy.ckpt_every == 0:
+            self.writer.save(self.policy.ckpt_path, self.executor.W, step=k,
+                             sharded=self.policy.ckpt_sharded)
+            self._saved_any = True
+            self.stats["checkpoints"] += 1
+
+    def on_rejoin(self, j: int) -> None:
+        self.stats["rejoins"] += 1
+        self._restore(j)
+
+    # -- restore ----------------------------------------------------------
+
+    def _restore(self, j: int) -> None:
+        """Overwrite worker j's slice with the latest consensus estimate:
+        the worker-mean of the last sharded/monolithic checkpoint if one
+        landed, else the live fleet's current mean (excluding j)."""
+        self.stats["restores"] += 1
+        ex = self.executor
+        w = None
+        if self.writer is not None and self._saved_any:
+            self.writer.wait()   # the snapshot must be fully on disk
+            like = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), ex.W)
+            stacked = ckpt_lib.restore(self.policy.ckpt_path, like=like)
+            w = ckpt_lib.consensus_params(stacked)
+        if w is None:
+            mask = np.asarray(self.engine.alive).copy()
+            mask[j] = False
+            if not mask.any():
+                mask[:] = True
+            w = ex.mean_params(mask)
+        ex.W = ex.set_slice(ex.W, j, w)
+
+    def close(self) -> None:
+        if self.writer is not None:
+            self.writer.close()
+
+
 @dataclasses.dataclass
 class SimRun:
     """Result of a simulated run: final stacked state + the event trace."""
@@ -219,6 +338,10 @@ def run_simulated(
     max_events: int | None = None,
     max_time: float | None = None,
     trace_path: str | None = None,
+    barrier_timeout: float | None = None,
+    degrade_mode: str = "reabsorb",
+    recovery: RecoveryPolicy | None = None,
+    fault_inject: Callable[[int, int, int], bool] | None = None,
 ) -> SimRun:
     """Train under virtual wall-clocks on the discrete-event simulator.
 
@@ -250,6 +373,17 @@ def run_simulated(
         per round (sync/hier: every `eval_every` rounds when the whole round
         completes; async/stale: every `eval_every` completed computations).
       trace_path: if set, write the JSON event trace there.
+      barrier_timeout / degrade_mode: makes the barrier protocols
+        (sync/hier) churn-capable — a worker whose barrier stalls for
+        `barrier_timeout` virtual seconds commits over the snapshots that
+        arrived, with the survivor-repaired weight column (`degrade_mode`
+        'reabsorb' | 'renormalize'). Fault-free runs are unaffected.
+      recovery / fault_inject: attach a :class:`RecoveryPolicy`.
+        ``fault_inject(worker, round, attempt) -> bool`` marks a step
+        attempt as failed (retried with backoff per the policy; restored
+        from the last consensus checkpoint once retries exhaust). Passing
+        either enables the recovery manager; its counters land in
+        ``trace.meta['recovery']``.
     """
     from repro import sim
 
@@ -257,6 +391,14 @@ def run_simulated(
     if proto_cls is None:
         raise ValueError(f"unknown protocol {protocol!r}; "
                          f"choose from {sorted(sim.PROTOCOLS)}")
+    proto_kw = {}
+    if barrier_timeout is not None:
+        if protocol not in ("sync", "hier"):
+            raise ValueError(
+                "barrier_timeout configures the barrier protocols "
+                f"(sync/hier); protocol {protocol!r} has no barrier")
+        proto_kw = dict(barrier_timeout=barrier_timeout,
+                        degrade_mode=degrade_mode)
     if mesh is not None:
         from repro.launch.mesh import WorkerMesh
 
@@ -272,9 +414,24 @@ def run_simulated(
             mesh = dataclasses.replace(
                 mesh, payload_bytes=_meshless_payload_bytes(template))
     executor = sim.TrainExecutor(loss_fn, optimizer, params0, batches, gossip)
-    proto = proto_cls(executor=executor, eval_fn=eval_fn, eval_every=eval_every)
+    proto = proto_cls(executor=executor, eval_fn=eval_fn,
+                      eval_every=eval_every, **proto_kw)
+    mgr = None
+    if recovery is not None or fault_inject is not None:
+        mgr = _RecoveryManager(recovery or RecoveryPolicy(), executor,
+                               fault_inject)
+        proto.recovery = mgr
     eng = sim.Engine(gossip.topology, scenario, mesh=mesh)
-    eng.run(proto, until_round=rounds, max_events=max_events, max_time=max_time)
+    if mgr is not None:
+        mgr.engine = eng
+    try:
+        eng.run(proto, until_round=rounds, max_events=max_events,
+                max_time=max_time)
+    finally:
+        if mgr is not None:
+            mgr.close()
+    if mgr is not None:
+        eng.trace.meta["recovery"] = dict(mgr.stats)
     if trace_path:
         eng.trace.save(trace_path)
     return SimRun(params=executor.W, opt_state=executor.opt, trace=eng.trace,

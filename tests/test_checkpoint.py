@@ -389,3 +389,49 @@ def test_async_writer_bounds_pending_saves(tmp_path, monkeypatch):
     assert gate.is_set()                        # i.e. save() had to drain
     w.close()
     assert written == ["a.npz", "b.npz", "c.npz"]
+
+
+def test_async_writer_retries_transient_io_errors(tmp_path, monkeypatch):
+    """Two transient OSErrors, then success: save() completes, no error is
+    raised, and the checkpoint on disk is intact."""
+    real_savez = np.savez
+    fails = {"n": 2}
+    calls = []
+
+    def flaky_savez(path, **arrs):
+        calls.append(os.path.basename(path))
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("transient NFS hiccup")
+        real_savez(path, **arrs)
+
+    monkeypatch.setattr(C.np, "savez", flaky_savez)
+    tree = {"x": jnp.arange(6, dtype=jnp.float32)}
+    path = os.path.join(tmp_path, "flaky.npz")
+    with C.AsyncCheckpointWriter(io_retries=3, io_backoff=0.001) as w:
+        w.save(path, tree, step=4)
+        w.wait()                                # must not raise
+    back = C.restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(back["x"]),
+                                  np.asarray(tree["x"]))
+    assert len(calls) == 3                      # 2 failures + 1 success
+    assert C.latest_step(path) == 4
+
+
+def test_async_writer_terminal_failure_surfaces_on_next_save(
+        tmp_path, monkeypatch):
+    """When every retry fails, wait() raises the OSError and the writer is
+    terminally failed: the next save() raises instead of silently dropping
+    checkpoints."""
+    def broken_savez(path, **arrs):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(C.np, "savez", broken_savez)
+    tree = {"x": jnp.ones(3)}
+    w = C.AsyncCheckpointWriter(io_retries=2, io_backoff=0.001)
+    w.save(os.path.join(tmp_path, "dead.npz"), tree)
+    with pytest.raises(OSError, match="disk gone"):
+        w.wait()
+    with pytest.raises(RuntimeError, match="terminally"):
+        w.save(os.path.join(tmp_path, "next.npz"), tree)
+    w.close()

@@ -1,0 +1,609 @@
+"""Fault-tolerance suite (ISSUE 6): survivor-renormalized mixing, hier pod
+re-planning, churn-capable barrier protocols, link-fault injection, and the
+checkpoint-backed recovery policy.
+
+Acceptance pins: the full-live-mask repair path and the timeout-armed
+no-fault runs are BIT-IDENTICAL to the fault-oblivious code (trajectories
+and trace signatures), and all four protocols survive churn + link-fault
+scenarios.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as T
+from repro.core.decentralized import replicate_for_workers
+from repro.core.gossip import (GossipSpec, mix_pytree_reference, survivor_mix,
+                               survivor_hierarchical_mix, hierarchical_mix)
+from repro.optim import sgd
+from repro.sim import Engine, MeshSpec, SyncGossip, scenarios
+from repro.sim.scenarios import LinkFault, Scenario
+from repro.train.loop import RecoveryPolicy, run_simulated
+
+from test_sim_engine import _batches, _linear_problem, _sim  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# Core: survivor_column / survivor_matrix properties
+# ---------------------------------------------------------------------------
+
+
+def _random_case(seed):
+    """(topology, alive-mask) with >= 1 survivor, over assorted families."""
+    rng = np.random.default_rng(seed)
+    topo = [T.undirected_ring(8), T.ring_lattice(8, 4), T.clique(6),
+            T.hypercube(8), T.random_regular(10, 3, seed=seed),
+            T.star(7)][seed % 6]
+    alive = rng.random(topo.M) > 0.35
+    if not alive.any():
+        alive[rng.integers(topo.M)] = True
+    return topo, alive
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("mode", ["reabsorb", "renormalize"])
+def test_survivor_matrix_properties(seed, mode):
+    """Live columns stay stochastic over survivors, dead columns are
+    identity, dead rows carry zero weight in live columns."""
+    topo, alive = _random_case(seed)
+    A2 = T.survivor_matrix(topo.A, alive, mode=mode)
+    M = topo.M
+    for j in range(M):
+        col = A2[:, j]
+        if alive[j]:
+            assert abs(col.sum() - 1.0) < 1e-12, (j, col.sum())
+            dead = ~alive.copy()
+            dead[j] = False
+            assert np.all(col[dead] == 0.0)
+        else:
+            expect = np.zeros(M)
+            expect[j] = 1.0
+            assert np.array_equal(col, expect)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_survivor_matrix_full_mask_is_bitwise_copy(seed):
+    topo, _ = _random_case(seed)
+    alive = np.ones(topo.M, dtype=bool)
+    for mode in ("reabsorb", "renormalize"):
+        A2 = T.survivor_matrix(topo.A, alive, mode=mode)
+        assert np.array_equal(A2, topo.A)
+
+
+def test_survivor_column_modes_differ_where_expected():
+    topo = T.undirected_ring(6)
+    keep = np.ones(6, dtype=bool)
+    keep[1] = False          # drop one in-neighbor of column 0
+    col0 = np.array(topo.A[:, 0])
+    re = T.survivor_column(col0, 0, keep, "reabsorb")
+    rn = T.survivor_column(col0, 0, keep, "renormalize")
+    # reabsorb: dropped mass goes to the self-loop exclusively
+    assert re[0] == pytest.approx(col0[0] + col0[1])
+    assert re[5] == col0[5]
+    # renormalize: all surviving entries scale up
+    assert rn[0] == pytest.approx(col0[0] / (1 - col0[1]))
+    assert rn[5] == pytest.approx(col0[5] / (1 - col0[1]))
+    for v in (re, rn):
+        assert v[1] == 0.0 and abs(v.sum() - 1.0) < 1e-12
+    with pytest.raises(ValueError, match="mode"):
+        T.survivor_column(col0, 0, keep, "nope")
+
+
+def test_survivor_matrix_validates_mask():
+    topo = T.undirected_ring(4)
+    with pytest.raises(ValueError):
+        T.survivor_matrix(topo.A, np.ones(5, dtype=bool))
+    with pytest.raises(ValueError):
+        T.survivor_matrix(topo.A, np.zeros(4, dtype=bool))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), mode=st.sampled_from(
+    ["reabsorb", "renormalize"]))
+def test_survivor_matrix_properties_hypothesis(seed, mode):
+    """Property form of the survivor guarantees over random (topo, mask)."""
+    topo, alive = _random_case(seed)
+    A2 = T.survivor_matrix(topo.A, alive, mode=mode)
+    sums = A2[:, alive].sum(axis=0)
+    assert np.all(np.abs(sums - 1.0) < 1e-12)
+    dead = np.nonzero(~alive)[0]
+    for j in dead:
+        assert A2[j, j] == 1.0 and A2[:, j].sum() == 1.0
+    # dead rows contribute nothing to any live column
+    assert np.all(A2[np.ix_(dead, np.nonzero(alive)[0])] == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_survivor_column_full_keep_is_identity_hypothesis(seed):
+    topo, _ = _random_case(seed)
+    j = seed % topo.M
+    col = np.array(topo.A[:, j])
+    out = T.survivor_column(col, j, np.ones(topo.M, dtype=bool))
+    assert np.array_equal(out, col)
+
+
+# ---------------------------------------------------------------------------
+# Core: hier pod-drop re-planning
+# ---------------------------------------------------------------------------
+
+
+def test_repair_hier_stages_full_mask_matches_split_kronecker():
+    topo = T.hier(4, 3)
+    alive = np.ones(topo.M, dtype=bool)
+    intra_A, inter_A = T.repair_hier_stages(topo, alive)
+    intra_t, inter_t = T.split_kronecker(topo)
+    assert np.array_equal(intra_A, intra_t.A)
+    assert np.array_equal(inter_A, inter_t.A)
+
+
+def test_repair_hier_stages_bridges_dead_pod():
+    """hier(4,3) pods sit on an outer ring 0-1-2-3; killing pod 1 entirely
+    must bridge pods 0 and 2 through the gap so the survivor inter-stage
+    stays connected (consensus over survivors remains achievable)."""
+    topo = T.hier(4, 3)
+    s = 3
+    alive = np.ones(topo.M, dtype=bool)
+    alive[1 * s:2 * s] = False        # pod 1 fully dead
+    intra_A, inter_A = T.repair_hier_stages(topo, alive)
+    # the bridged outer graph gives pod0<->pod2 a direct edge: worker 0
+    # (pod 0) now takes weight from worker 6 (pod 2)
+    assert inter_A[6, 0] > 0.0
+    # survivor columns stochastic, dead columns identity
+    for j in range(topo.M):
+        for A2 in (intra_A, inter_A):
+            if alive[j]:
+                assert abs(A2[:, j].sum() - 1.0) < 1e-12
+            else:
+                assert A2[j, j] == 1.0
+    # composed mixing still reaches consensus over survivors
+    W = inter_A @ intra_A
+    P = np.linalg.matrix_power(W[np.ix_(alive, alive)], 60)
+    assert np.max(np.abs(P - P.mean(axis=0, keepdims=True))) < 1e-8
+
+
+def test_repair_hier_stages_partial_pod_loss_keeps_outer_plan():
+    """Losing SOME workers of a pod is a plain survivor repair — the outer
+    Kronecker plan survives (no bridging), only weights renormalize."""
+    topo = T.hier(4, 3)
+    alive = np.ones(topo.M, dtype=bool)
+    alive[4] = False                  # one worker of pod 1
+    intra_A, inter_A = T.repair_hier_stages(topo, alive, mode="renormalize")
+    intra_t, inter_t = T.split_kronecker(topo)
+    assert np.array_equal(
+        intra_A, T.survivor_matrix(intra_t.A, alive, mode="renormalize"))
+    assert np.array_equal(
+        inter_A, T.survivor_matrix(inter_t.A, alive, mode="renormalize"))
+
+
+# ---------------------------------------------------------------------------
+# Core: gossip entry points bit-match at full mask
+# ---------------------------------------------------------------------------
+
+
+def _params(M, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(M, 5))),
+            "b": jnp.asarray(rng.normal(size=(M, 2, 3)))}
+
+
+def test_survivor_mix_full_mask_bitmatches_reference():
+    topo = T.ring_lattice(8, 4)
+    p = _params(8)
+    ref = mix_pytree_reference(p, topo.A)
+    out = survivor_mix(p, topo, np.ones(8, dtype=bool))
+    assert jax.tree.all(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), ref, out))
+
+
+def test_survivor_hierarchical_mix_full_mask_bitmatches():
+    topo = T.hier(4, 3)
+    p = _params(topo.M, seed=3)
+    intra_t, inter_t = T.split_kronecker(topo)
+    ref = mix_pytree_reference(mix_pytree_reference(p, intra_t.A), inter_t.A)
+    out = survivor_hierarchical_mix(p, topo, np.ones(topo.M, dtype=bool))
+    assert jax.tree.all(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), ref, out))
+
+
+def test_survivor_mix_keeps_dead_rows_fixed():
+    topo = T.undirected_ring(6)
+    p = _params(6, seed=1)
+    alive = np.ones(6, dtype=bool)
+    alive[2] = False
+    out = survivor_mix(p, topo, alive)
+    # dead worker's row passes through untouched (identity column)
+    assert jnp.array_equal(out["a"][2], p["a"][2])
+    # live rows took no weight from the dead row: perturbing it is invisible
+    p2 = {k: v.at[2].add(100.0) for k, v in p.items()}
+    out2 = survivor_mix(p2, topo, alive)
+    live = np.nonzero(alive)[0]
+    assert jnp.array_equal(out["a"][live], out2["a"][live])
+
+
+# ---------------------------------------------------------------------------
+# Sim: no-fault runs with a barrier timeout are bit-identical (acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol,topo,mesh", [
+    ("sync", T.undirected_ring(6), None),
+    ("hier", T.hier(3, 3), "topology"),
+])
+def test_barrier_timeout_nofault_bitmatch(protocol, topo, mesh):
+    """With no churn/link faults in the scenario, configuring a barrier
+    timeout changes NOTHING: same trace signature (seq numbers included),
+    same final parameters, bit for bit."""
+    kw = dict(rounds=12, scenario=scenarios.heavy_tail("spark", seed=5),
+              mesh=mesh)
+    base = _sim(protocol, topo, **kw)
+    timed = _sim(protocol, topo, barrier_timeout=4.0, **kw)
+    assert base.trace.signature() == timed.trace.signature()
+    assert np.array_equal(np.asarray(base.params["w"]),
+                          np.asarray(timed.params["w"]))
+
+
+def test_barrier_timeout_validation():
+    with pytest.raises(ValueError, match="barrier_timeout"):
+        SyncGossip(barrier_timeout=0.0)
+    with pytest.raises(ValueError, match="degrade_mode"):
+        SyncGossip(barrier_timeout=1.0, degrade_mode="drop")
+    X, y, params0, loss = _linear_problem()
+    with pytest.raises(ValueError, match="barrier"):
+        run_simulated(loss, replicate_for_workers(params0, 4), sgd(0.1),
+                      _batches(X, y, 4),
+                      gossip=GossipSpec(topology=T.undirected_ring(4)),
+                      protocol="async", rounds=2, barrier_timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Sim: churn-capable barrier protocols (timeout/degrade) + engine gate
+# ---------------------------------------------------------------------------
+
+
+def test_sync_without_timeout_rejects_churn_naming_the_knob():
+    topo = T.undirected_ring(6)
+    sc = scenarios.preemption_wave(6, start=2.0, count=2, seed=1)
+    with pytest.raises(NotImplementedError, match="barrier_timeout"):
+        _sim("sync", topo, rounds=8, scenario=sc)
+
+
+@pytest.mark.parametrize("mode", ["reabsorb", "renormalize"])
+def test_sync_rides_through_permanent_failure(mode):
+    """A worker dies and never rejoins: survivors time out, commit over the
+    survivor-repaired column, and still finish every round with finite
+    parameters."""
+    topo = T.undirected_ring(6)
+    sc = scenarios.flaky_workers(6, fail_times={2: 3.0}, seed=4)
+    run = _sim("sync", topo, rounds=10, scenario=sc, barrier_timeout=1.5,
+               degrade_mode=mode)
+    done = run.trace.rounds_completed()
+    assert np.all(np.delete(done, 2) == 10), done
+    assert np.isfinite(np.asarray(run.params["w"])).all()
+    # the dead worker's row is frozen at its last committed value
+    assert done[2] < 10
+
+
+def test_sync_preemption_wave_rejoin_recovers_all_workers():
+    topo = T.undirected_ring(8)
+    sc = scenarios.preemption_wave(8, start=3.0, interval=0.7, count=2,
+                                   down_for=5.0, seed=3)
+    run = _sim("sync", topo, rounds=14, scenario=sc, barrier_timeout=2.0)
+    assert np.all(run.trace.rounds_completed() == 14)
+    assert np.isfinite(np.asarray(run.params["w"])).all()
+    # degraded commits really happened: some TIMEOUT events were traced
+    kinds = {r.kind for r in run.trace.records}
+    assert "timeout" in kinds and "fail" in kinds and "join" in kinds
+
+
+def test_hier_pod_churn_with_timeout():
+    topo = T.hier(3, 3)
+    sc = scenarios.preemption_wave(9, start=2.0, interval=0.4, count=3,
+                                   down_for=4.0, seed=2)
+    run = _sim("hier", topo, rounds=12, scenario=sc, mesh="topology",
+               barrier_timeout=2.0)
+    assert run.trace.rounds_completed().min() >= 10
+    assert np.isfinite(np.asarray(run.params["w"])).all()
+
+
+@pytest.mark.parametrize("protocol", ["sync", "async", "stale", "hier"])
+def test_all_protocols_survive_churn_and_link_faults(protocol):
+    """The four-protocol robustness matrix (acceptance): every protocol
+    runs a churn scenario AND a link-fault scenario to completion."""
+    topo = T.hier(3, 3)
+    barrier_kw = dict(barrier_timeout=2.5) if protocol in ("sync", "hier") \
+        else {}
+    # churn
+    churn = scenarios.preemption_wave(9, start=2.0, interval=0.5, count=2,
+                                      down_for=4.0, seed=6)
+    run = _sim(protocol, topo, rounds=10, scenario=churn, mesh="topology",
+               **barrier_kw)
+    assert run.trace.rounds_completed().max() == 10
+    assert np.isfinite(np.asarray(run.params["w"])).all()
+    # link faults (regional DCI outage)
+    outage = scenarios.regional_outage(pod=1, start=3.0, duration=5.0,
+                                       dci_latency=0.5, seed=6)
+    run2 = _sim(protocol, topo, rounds=10, scenario=outage, mesh="topology",
+                **barrier_kw)
+    assert run2.trace.rounds_completed().max() == 10
+    assert np.isfinite(np.asarray(run2.params["w"])).all()
+    acct = run2.trace.link_accounting()
+    assert acct["dci"]["downtime"] == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# Sim: link-fault event mechanics (deterministic timing)
+# ---------------------------------------------------------------------------
+
+
+def _det_two_pod_engine(fault, *, dci_latency=1.0):
+    topo = T.hier(2, 2)
+    sc = Scenario(
+        name="det",
+        compute=scenarios.sampled(scenarios.deterministic(1.0)),
+        link_classes=scenarios.two_class_links(ici_latency=0.25,
+                                               dci_latency=dci_latency),
+        link_faults=(fault,),
+        seed=0)
+    return Engine(topo, sc, mesh=MeshSpec.from_topology(topo))
+
+
+def test_dead_link_holds_messages_until_recovery():
+    """A message sent into a DOWN window is delivered at recovery + delay
+    and marked retried; messages after recovery are charged normally."""
+    fault = LinkFault(start=0.5, duration=10.0, link_class="dci")
+    eng = _det_two_pod_engine(fault)
+    tr = eng.run(SyncGossip(executor=None), until_round=3, max_time=40.0)
+    dci = [r for r in tr.records if r.kind == "arrival"
+           and r.link_class == "dci"]
+    held = [r for r in dci if r.retried]
+    assert held, "no message crossed the outage window"
+    for r in held:
+        # delivery = down_until + drawn delay = 10.5 + 1.0
+        assert r.t >= fault.end + 1.0 - 1e-12
+    acct = tr.link_accounting()
+    assert acct["dci"]["retried_messages"] == len(held)
+    assert acct["dci"]["downtime"] == pytest.approx(10.0)
+    assert acct["dci"]["retried_bytes"] == \
+        len(held) * eng.mesh.payload_bytes
+
+
+def test_degraded_link_multiplies_delay():
+    fault = LinkFault(start=0.0, duration=100.0, link_class="dci",
+                      factor=3.0)
+    eng = _det_two_pod_engine(fault)
+    tr = eng.run(SyncGossip(executor=None), until_round=2, max_time=50.0)
+    dci = [r for r in tr.records if r.kind == "arrival"
+           and r.link_class == "dci"]
+    assert dci and all(r.wire_time == pytest.approx(3.0) for r in dci)
+    assert not any(r.retried for r in dci)
+
+
+def test_pod_scoped_fault_spares_other_pods():
+    """A pod-scoped DCI outage on hier(4,2) delays only edges touching that
+    pod; DCI traffic between the other pods flows at normal cost."""
+    topo = T.hier(4, 2)
+    fault = LinkFault(start=0.0, duration=30.0, link_class="dci", pod=1)
+    sc = Scenario(
+        name="det",
+        compute=scenarios.sampled(scenarios.deterministic(1.0)),
+        link_classes=scenarios.two_class_links(ici_latency=0.25,
+                                               dci_latency=1.0),
+        link_faults=(fault,), seed=0)
+    mesh = MeshSpec.from_topology(topo)
+    eng = Engine(topo, sc, mesh=mesh)
+    tr = eng.run(SyncGossip(executor=None), until_round=2, max_time=60.0)
+    g = np.asarray(mesh.group_of)
+    dci = [r for r in tr.records
+           if r.kind == "arrival" and r.link_class == "dci"]
+    retried = [r for r in dci if r.retried]
+    # every held message touches the faulted pod, and no pod-1 DCI traffic
+    # lands inside the outage window
+    assert retried
+    assert all(g[r.src] == 1 or g[r.worker] == 1 for r in retried)
+    for r in dci:
+        if g[r.src] == 1 or g[r.worker] == 1:
+            assert r.t >= fault.end, (r,)
+    # traffic between the other pods is unaffected: normal wire time and
+    # at least some of it lands during the outage
+    spared = [r for r in dci if g[r.src] != 1 and g[r.worker] != 1]
+    assert any(r.t < fault.end for r in spared)
+    assert all(not r.retried and r.wire_time == pytest.approx(1.0)
+               for r in spared)
+
+
+def test_link_faults_require_mesh():
+    topo = T.undirected_ring(4)
+    sc = Scenario(link_faults=(LinkFault(start=1.0, duration=1.0),))
+    with pytest.raises(ValueError, match="mesh"):
+        Engine(topo, sc)
+
+
+def test_trace_roundtrip_preserves_fault_annotations(tmp_path):
+    fault = LinkFault(start=0.5, duration=6.0, link_class="dci")
+    eng = _det_two_pod_engine(fault)
+    tr = eng.run(SyncGossip(executor=None), until_round=2, max_time=30.0)
+    path = os.path.join(tmp_path, "trace.json")
+    tr.save(path)
+    back = type(tr).load(path)
+    assert back.signature() == tr.signature()
+    assert [r.retried for r in back.records] == \
+        [r.retried for r in tr.records]
+    assert back.link_accounting() == tr.link_accounting()
+
+
+# ---------------------------------------------------------------------------
+# Scenario validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_rejects_bad_churn_worker_ids():
+    with pytest.raises(ValueError, match="worker"):
+        Scenario(churn=((1.0, -1, "fail"),))
+    with pytest.raises(ValueError, match="worker"):
+        Scenario(churn=((1.0, True, "fail"),))
+    with pytest.raises(ValueError):
+        Scenario(churn=((1.0, 1.5, "fail"),))
+
+
+def test_scenario_validate_for_bounds():
+    sc = Scenario(churn=((1.0, 7, "fail"),))
+    with pytest.raises(ValueError, match="workers"):
+        sc.validate_for(4)
+    sc.validate_for(8)      # fine
+    out = scenarios.regional_outage(pod=3, start=1.0, duration=1.0)
+    with pytest.raises(ValueError, match="pod"):
+        out.validate_for(8, n_groups=2)
+    out.validate_for(8, n_groups=4)
+
+
+def test_engine_validates_churn_ids_against_fleet():
+    sc = Scenario(churn=((1.0, 9, "fail"),))
+    with pytest.raises(ValueError, match="workers"):
+        Engine(T.undirected_ring(4), sc)
+
+
+def test_link_fault_validation():
+    with pytest.raises(ValueError):
+        LinkFault(start=-1.0, duration=1.0)
+    with pytest.raises(ValueError):
+        LinkFault(start=0.0, duration=0.0)
+    with pytest.raises(ValueError):
+        LinkFault(start=0.0, duration=1.0, link_class="wan")
+    with pytest.raises(ValueError):
+        LinkFault(start=0.0, duration=1.0, factor=0.0)
+
+
+def test_flaky_workers_validates_ids():
+    with pytest.raises(ValueError):
+        scenarios.flaky_workers(4, fail_times={4: 1.0})
+
+
+def test_robustness_builders_shapes():
+    wave = scenarios.preemption_wave(8, count=2, down_for=3.0)
+    assert sum(1 for _, _, k in wave.churn if k == "fail") == 2
+    assert sum(1 for _, _, k in wave.churn if k == "join") == 2
+    el = scenarios.elastic(6, initial=4)
+    assert {w for _, w, k in el.churn if k == "join"} == {4, 5}
+    out = scenarios.regional_outage(pod=0, start=1.0, duration=2.0)
+    assert out.has_link_faults and out.link_faults[0].pod == 0
+    assert "regional_outage" in out.name
+
+
+# ---------------------------------------------------------------------------
+# Recovery policy (fault injection, backoff, checkpoint-backed restore)
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError):
+        RecoveryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(backoff_base=0.0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(ckpt_every=0)
+
+
+def test_fault_injected_steps_retry_with_backoff():
+    topo = T.undirected_ring(6)
+    fails = []
+
+    def inject(j, k, attempt):
+        if j == 3 and k == 5 and attempt < 2:
+            fails.append((j, k, attempt))
+            return True
+        return False
+
+    run = _sim("sync", topo, rounds=10,
+               scenario=scenarios.heavy_tail("spark", seed=2),
+               fault_inject=inject,
+               recovery=RecoveryPolicy(max_retries=3, backoff_base=0.2))
+    assert fails == [(3, 5, 0), (3, 5, 1)]
+    st_ = run.trace.meta["recovery"]
+    assert st_["step_failures"] == 2 and st_["retries"] == 2
+    assert st_["restores"] == 0
+    assert np.all(run.trace.rounds_completed() == 10)
+    # failed attempts are traced with the retried flag
+    flagged = [r for r in run.trace.records
+               if r.retried and r.kind == "compute_done"]
+    assert len(flagged) == 2
+    # and both retries pushed worker 3's round-5 commit later than attempt 1
+    w3 = [r.t for r in run.trace.records
+          if r.kind == "compute_done" and r.worker == 3 and r.round == 5]
+    assert len(w3) == 3 and w3[0] < w3[1] < w3[2]
+
+
+def test_exhausted_retries_restore_from_checkpoint(tmp_path):
+    topo = T.undirected_ring(6)
+    ck = os.path.join(tmp_path, "ck.npz")
+
+    def inject(j, k, attempt):
+        return j == 1 and k == 8 and attempt < 9   # beyond max_retries
+
+    run = _sim("sync", topo, rounds=10,
+               scenario=scenarios.heavy_tail("spark", seed=2),
+               fault_inject=inject,
+               recovery=RecoveryPolicy(max_retries=2, backoff_base=0.1,
+                                       ckpt_path=ck, ckpt_every=6))
+    st_ = run.trace.meta["recovery"]
+    assert st_["retries"] == 2 and st_["restores"] == 1
+    assert st_["checkpoints"] >= 1
+    assert np.all(run.trace.rounds_completed() == 10)
+    assert np.isfinite(np.asarray(run.params["w"])).all()
+    # the sharded consensus checkpoint landed on disk
+    assert os.path.exists(os.path.join(tmp_path, "ck.meta.json"))
+
+
+def test_rejoining_worker_restores_consensus_snapshot(tmp_path):
+    """Kill a worker mid-run; on rejoin its slice is overwritten with the
+    consensus of the last checkpoint — not its stale pre-fail estimate."""
+    topo = T.undirected_ring(6)
+    ck = os.path.join(tmp_path, "ck.npz")
+    sc = scenarios.flaky_workers(6, fail_times={4: 4.0}, rejoin_after=3.0,
+                                 seed=1)
+    run = _sim("stale", topo, rounds=14, scenario=sc,
+               recovery=RecoveryPolicy(ckpt_path=ck, ckpt_every=8))
+    st_ = run.trace.meta["recovery"]
+    assert st_["rejoins"] == 1 and st_["restores"] == 1
+    assert np.all(run.trace.rounds_completed() == 14)
+    w = np.asarray(run.params["w"])
+    # rejoined worker converged with the fleet, not frozen at w(t=4)
+    spread = np.abs(w[4] - w.mean(axis=0)).max()
+    assert spread < np.abs(w.mean(axis=0)).max()
+
+
+def test_recovery_without_checkpoint_uses_live_mean():
+    topo = T.undirected_ring(6)
+
+    def inject(j, k, attempt):
+        return j == 0 and k == 6 and attempt < 3
+
+    run = _sim("async", topo, rounds=10,
+               scenario=scenarios.heavy_tail("spark", seed=7),
+               fault_inject=inject,
+               recovery=RecoveryPolicy(max_retries=1, backoff_base=0.1))
+    st_ = run.trace.meta["recovery"]
+    assert st_["restores"] >= 1 and st_["checkpoints"] == 0
+    assert np.isfinite(np.asarray(run.params["w"])).all()
+
+
+# ---------------------------------------------------------------------------
+# Eval curve keeps flowing under churn
+# ---------------------------------------------------------------------------
+
+
+def test_round_eval_survives_permanent_failure():
+    topo = T.undirected_ring(6)
+    sc = scenarios.flaky_workers(6, fail_times={2: 3.0}, seed=4)
+    run = _sim("sync", topo, rounds=10, scenario=sc, barrier_timeout=1.5,
+               eval_every=2)
+    ts, vs = run.eval_curve()
+    assert len(vs) >= 4          # rounds 2..10 step 2, minus boundary churn
+    assert vs[-1] < vs[0]        # optimization still progressing
