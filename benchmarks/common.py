@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import topology as T
 from repro.core.decentralized import init_state, make_train_step, replicate_for_workers
 from repro.core.gossip import GossipSpec
@@ -19,12 +20,18 @@ from repro.optim import momentum_sgd, sgd
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
+# (name, path) of every artifact save_json wrote this process — the registry
+# benchmarks/run.py renders its end-of-run summary table from.
+ARTIFACTS: list[tuple[str, str]] = []
+
 
 def save_json(name: str, payload: Any) -> str:
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, f"{name}.json")
+    payload = telemetry.stamp(payload, writer=f"bench:{name}")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    ARTIFACTS.append((name, path))
     return path
 
 

@@ -1,7 +1,9 @@
 """Benchmark driver: one bench per paper table/figure + the roofline table.
 
-Prints ``bench,name,us_per_call,derived`` CSV rows and writes JSON artifacts
-to results/bench/.
+Prints ``bench,name,us_per_call,derived`` CSV rows, writes JSON artifacts to
+results/bench/ (provenance-stamped via ``benchmarks.common.save_json``), and
+ends with a summary table — one row per lane: key metric + artifact path —
+so a ``--quick`` CI run is readable without trawling results/bench/.
 
 Usage: python benchmarks/run.py [--quick] [only_name]
 ``--quick`` runs reduced problem sizes where a bench supports it (CI smoke).
@@ -29,8 +31,21 @@ BENCHES = [
 ]
 
 
+def _key_metric(rows: list[dict]) -> str:
+    """First numeric field of the first row — the lane's headline number."""
+    for r in rows:
+        for k, v in r.items():
+            if isinstance(v, bool) or k in ("bench",):
+                continue
+            if isinstance(v, (int, float)):
+                return f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+    return "-"
+
+
 def main() -> None:
     import importlib
+
+    from benchmarks import common
 
     argv = [a for a in sys.argv[1:]]
     quick = "--quick" in argv
@@ -42,10 +57,12 @@ def main() -> None:
                          f"{[n for n, _ in BENCHES]}")
     print("bench,name,us_per_call,derived")
     failures = []
+    summary: list[tuple[str, str, str, float]] = []
     for name, modname in BENCHES:
         if only and only != name:
             continue
         t0 = time.perf_counter()
+        art0 = len(common.ARTIFACTS)
         try:
             mod = importlib.import_module(modname)
             kwargs = {}
@@ -64,6 +81,17 @@ def main() -> None:
                      if k not in ("bench", "problem", "arch", "dist", "topology")}
             derived = ";".join(f"{k}={v}" for k, v in list(extra.items())[:6])
             print(f"{name},{tag},{dt / max(len(rows), 1):.0f},{derived}")
+        arts = [p for _, p in common.ARTIFACTS[art0:]]
+        summary.append((name, _key_metric(rows),
+                        arts[-1] if arts else "-",
+                        (time.perf_counter() - t0)))
+
+    if summary:
+        print()
+        print(f"{'lane':<10} {'key metric':<28} {'wall':>7}  artifact")
+        print(f"{'-' * 10} {'-' * 28} {'-' * 7}  {'-' * 8}")
+        for name, metric, art, secs in summary:
+            print(f"{name:<10} {metric:<28} {secs:6.1f}s  {art}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

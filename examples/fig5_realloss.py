@@ -25,6 +25,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import numpy as np
 
 from benchmarks import common
+from repro import telemetry
 from repro.core import topology as T
 from repro.sim import scenarios, time_to_target
 
@@ -57,6 +58,7 @@ def run(quick: bool = False) -> dict:
         summary[f"{name}_final_vtime"] = float(t[-1])
         summary[f"{name}_time_to_target"] = time_to_target(t, f, target)
     out["summary"] = summary
+    telemetry.stamp(out, config=summary, writer="fig5_realloss")
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "fig5_realloss.json"), "w") as fp:
         json.dump(out, fp, indent=1)

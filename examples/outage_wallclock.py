@@ -19,7 +19,15 @@ NO fault at all — topology choice buys robustness for free. Writes
 ``results/outage_crossing.json`` (curves, vtime-to-target, per-class
 downtime + retried-byte accounting from ``Trace.link_accounting``).
 
-    PYTHONPATH=src python examples/outage_wallclock.py [--quick]
+``--trace`` additionally exports a full telemetry bundle per job under
+``results/runs/outage/<job>/`` — ``trace.json``, a Perfetto-loadable
+``perfetto.json`` timeline (worker lanes, link-fault windows, health-gauge
+counters), and ``telemetry.json`` — with gossip-health gauges (spectral
+gap / effective neighbors of the active mixing matrix) sampled across the
+outage. Summarize with ``python -m repro.telemetry.report
+results/runs/outage/<job>``.
+
+    PYTHONPATH=src python examples/outage_wallclock.py [--quick] [--trace]
 """
 import json
 import os
@@ -31,6 +39,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import numpy as np
 
 from benchmarks import common
+from repro import telemetry
 from repro.core import topology as T
 from repro.sim import MeshSpec, scenarios, time_to_target
 
@@ -39,7 +48,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 ICI_LATENCY = 0.02
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False, trace: bool = False) -> dict:
     pods, pod_size = (2, 8) if quick else (2, 16)
     M = pods * pod_size
     dci = 12.0 if quick else 25.0
@@ -71,6 +80,9 @@ def run(quick: bool = False) -> dict:
     )
     out = {}
     for name, topo, proto, rounds, eval_every, scen, kw in jobs:
+        if trace:
+            kw = dict(kw, health=True,
+                      run_dir=os.path.join(RESULTS, "runs", "outage", name))
         r = common.run_sim(problem, topo, rounds=rounds, lr=lr,
                            protocol=proto, scenario=scen, mesh=mesh,
                            eval_every=eval_every, **kw)
@@ -103,14 +115,15 @@ def run(quick: bool = False) -> dict:
     summary["hier_dci_downtime"] = dci_acct["downtime"]
     summary["hier_dci_retried_bytes"] = dci_acct["retried_bytes"]
     out["summary"] = summary
+    telemetry.stamp(out, config=summary, writer="outage_wallclock")
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "outage_crossing.json"), "w") as fp:
         json.dump(out, fp, indent=1)
     return out
 
 
-def main(quick: bool = False):
-    out = run(quick)
+def main(quick: bool = False, trace: bool = False):
+    out = run(quick, trace=trace)
     s = out["summary"]
     o = s["outage"]
     print(f"M={s['M']} workers in {s['pods']} pods; pod {o['pod']}'s DCI "
@@ -132,9 +145,13 @@ def main(quick: bool = False):
           "stalls — while the flat")
     print("ring pays the timeout on every barrier its dead pod-boundary "
           "edges starve.")
+    if trace:
+        print("\ntelemetry bundles (perfetto.json loads at ui.perfetto.dev):")
+        for name in ("ring-nofault", "ring-outage", "hier-outage"):
+            print(f"  results/runs/outage/{name}/")
     if not s["hier_outage_beats_healthy_ring"]:
         raise SystemExit(1)
 
 
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv[1:])
+    main(quick="--quick" in sys.argv[1:], trace="--trace" in sys.argv[1:])

@@ -61,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro import compat, telemetry
 from repro.kernels.gossip_mix.kernel import (
     DEFAULT_BLOCK_C,
     DEFAULT_BLOCK_R,
@@ -501,6 +501,15 @@ def _mix_pytree_model_sharded(params, updates, spec, mesh, param_specs,
                                    treedef=jax.tree.structure(p))
         layout = plan_layout(local, lead_ndim=0, block_r=block_r,
                              shards=k, leaf_sharded=flags)
+        tel = telemetry.get()
+        if tel.active:
+            # trace-time emit (the shard_map body traces once per compile):
+            # per-shard wire bytes + the one-ICI-gather-per-dtype-group
+            # count of the row-split re-assembly
+            tel.gauge("bus.padded_bytes_shard", layout.padded_bytes())
+            tel.counter("bus.all_gathers", sum(
+                1 for g in layout.groups
+                if k > 1 and g.split_off < g.split_end))
         s = jax.lax.axis_index(spec.model_axis) if k > 1 else 0
         bufs = pack(local, layout, lead_ndim=0, shard_index=s)
         upd_bufs = None if u_loc is None else pack(u_loc, layout, lead_ndim=0,
@@ -604,6 +613,13 @@ def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     a0, others = _split_perms(spec)
+    # Telemetry fires at TRACE time (mix_bus runs inside jit): one emit per
+    # compile, zero per-step cost, and the counters are exactly the per-step
+    # collective counts (`bulk_collectives_per_step`) tests cross-check.
+    tel = telemetry.get()
+    if tel.active:
+        tel.counter("bus.mix_calls")
+        tel.counter("bus.collectives", bulk_collectives_per_step(spec, nchunks))
     weights = jnp.asarray([a0] + [w for w, _ in others], jnp.float32)
     eta_arr = jnp.asarray([eta], jnp.float32) if updates is not None else None
 
@@ -617,26 +633,34 @@ def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
     if mesh is None:
         mesh = compat.get_current_mesh()
     if mesh is not None and param_specs is not None:
-        return _mix_pytree_model_sharded(params, updates, spec, mesh,
-                                         param_specs, weights, eta_arr,
-                                         others, nchunks, interpret,
-                                         donate=not interpret,
-                                         block_r=block_r, block_c=block_c)
+        with tel.annotate("bus.fused_mix"):
+            return _mix_pytree_model_sharded(params, updates, spec, mesh,
+                                             param_specs, weights, eta_arr,
+                                             others, nchunks, interpret,
+                                             donate=not interpret,
+                                             block_r=block_r, block_c=block_c)
 
     layout = plan_layout(params, lead_ndim=1, block_r=block_r)
+    if tel.active:
+        # the per-device wire payload one gossip round ships on every
+        # non-identity permutation — the number the sim's per-class byte
+        # accounting charges (MeshSpec.payload_bytes)
+        tel.gauge("bus.padded_bytes", layout.padded_bytes())
     bufs = pack(params, layout)
     upd_bufs = None
     if updates is not None:
         upd_bufs = pack(updates, layout)
-    if mesh is not None:
-        mixed = _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights,
-                                     eta_arr, others, nchunks, interpret,
-                                     donate=not interpret,
-                                     groups=layout.groups, block_c=block_c)
-    else:
-        mixed = _mix_buffers_local(bufs, upd_bufs, weights, eta_arr, others,
-                                   nchunks, interpret, donate=False,
-                                   groups=layout.groups, block_c=block_c)
+    with tel.annotate("bus.fused_mix"):
+        if mesh is not None:
+            mixed = _mix_buffers_sharded(bufs, upd_bufs, spec, mesh, weights,
+                                         eta_arr, others, nchunks, interpret,
+                                         donate=not interpret,
+                                         groups=layout.groups, block_c=block_c)
+        else:
+            mixed = _mix_buffers_local(bufs, upd_bufs, weights, eta_arr,
+                                       others, nchunks, interpret,
+                                       donate=False, groups=layout.groups,
+                                       block_c=block_c)
     return unpack(mixed, layout)
 
 

@@ -69,7 +69,8 @@ class Engine:
     """
 
     def __init__(self, topology: Topology, scenario: scen_lib.Scenario | None = None,
-                 mesh: "scen_lib.MeshSpec | None" = None):
+                 mesh: "scen_lib.MeshSpec | None" = None,
+                 health: Any = None):
         self.topology = topology
         self.scenario = scenario or scen_lib.Scenario()
         self.M = topology.M
@@ -99,6 +100,16 @@ class Engine:
         self._group = None if self.mesh is None else \
             np.asarray(self.mesh.group_of)
         self._active_faults: list[scen_lib.LinkFault] = []
+        # gossip-health gauges (telemetry only — never perturbs the event
+        # schedule): None/False = off, True = defaults, or a HealthConfig
+        if health:
+            from repro.telemetry.health import HealthConfig
+            self.health = health if isinstance(health, HealthConfig) \
+                else HealthConfig()
+        else:
+            self.health = None
+        self._health_mode = "reabsorb"
+        self._health_hier = False
         ss = np.random.SeedSequence(self.scenario.seed)
         children = ss.spawn(self.M + 1)
         self.rngs = [np.random.default_rng(s) for s in children[: self.M]]
@@ -223,6 +234,36 @@ class Engine:
         """Uniform choice on the worker's own stream (e.g. gossip partner)."""
         return int(self.rngs[worker].choice(options))
 
+    # -- health gauges ----------------------------------------------------
+
+    def _blocked_edge(self, i: int, j: int) -> bool:
+        """Is the i→j edge inside an open dead-link fault window right now?
+        (Degraded — slow-but-alive — windows do not block the edge.)"""
+        cls = self.link_class(i, j)
+        for f in self._active_faults:
+            if f.factor is not None or f.link_class != cls:
+                continue
+            if f.pod is not None and self._group[i] != f.pod \
+                    and self._group[j] != f.pod:
+                continue
+            return True
+        return False
+
+    def _emit_health(self) -> None:
+        """Sample the health gauges of the ACTIVE mixing matrix — the
+        topology as currently switched, survivor-repaired for dead workers,
+        and column-repaired for edges inside dead-link windows — onto the
+        trace's virtual timeline. Called at t=0 and after every
+        matrix-changing event when ``health`` is enabled."""
+        from repro.telemetry.health import active_matrix, health_gauges
+
+        blocked = self._blocked_edge if any(
+            f.factor is None for f in self._active_faults) else None
+        A = active_matrix(self.topology, self.alive, blocked=blocked,
+                          mode=self._health_mode, hier=self._health_hier)
+        for name, v in health_gauges(A, self.health.gamma).items():
+            self.trace.record_gauge(self.clock, f"health.{name}", v)
+
     # -- main loop --------------------------------------------------------
 
     def run(self, protocol, *, until_round: int | None = None,
@@ -251,6 +292,12 @@ class Engine:
                 "binds its neighbor lists at start and does not support "
                 "topology-switch scenarios — use the async/stale protocols")
         protocol.bind(self, stop_round=until_round)
+        if self.health is not None:
+            # repair semantics follow the protocol actually running
+            self._health_mode = getattr(protocol, "degrade_mode", None) \
+                or self.health.mode
+            self._health_hier = getattr(protocol, "name", "") == "hier"
+            self._emit_health()     # t=0 baseline (pre-activated faults show)
         protocol.start()
         processed = 0
         while self._heap:
@@ -276,6 +323,9 @@ class Engine:
                     self._active_faults.append(ev.payload)
             elif ev.kind == LINK_UP:
                 self._active_faults.remove(ev.payload)
+            if self.health is not None and ev.kind in (
+                    FAIL, JOIN, SWITCH, LINK_DOWN, LINK_UP):
+                self._emit_health()
             info = protocol.handle(ev) or {}
             if info.get("skip"):
                 # a no-op event (e.g. a TIMEOUT whose barrier had already

@@ -68,6 +68,18 @@ class EvalRecord:
     value: float        # eval_fn(mean params over alive workers)
 
 
+@dataclasses.dataclass(frozen=True)
+class GaugeRecord:
+    """A health-gauge sample on the virtual timeline (e.g. the spectral gap
+    of the active mixing matrix after a churn repair). Gauges are telemetry
+    ONLY: they are excluded from :meth:`Trace.signature`, so enabling them
+    never perturbs determinism tests."""
+
+    t: float            # virtual time the gauge was sampled
+    name: str           # e.g. 'health.spectral_gap'
+    value: float
+
+
 class Trace:
     """Append-only event log plus protocol-recorded evaluation points."""
 
@@ -75,6 +87,7 @@ class Trace:
         self.M = M
         self.records: list[TraceRecord] = []
         self.evals: list[EvalRecord] = []
+        self.gauges: list[GaugeRecord] = []
         self.meta: dict[str, Any] = {}
 
     # -- recording --------------------------------------------------------
@@ -84,6 +97,9 @@ class Trace:
 
     def record_eval(self, t: float, rnd: int, value: float) -> None:
         self.evals.append(EvalRecord(t, rnd, value))
+
+    def record_gauge(self, t: float, name: str, value: float) -> None:
+        self.gauges.append(GaugeRecord(t, name, float(value)))
 
     def __len__(self) -> int:
         return len(self.records)
@@ -186,6 +202,8 @@ class Trace:
         acct = self.link_accounting()
         if acct:
             out["link_accounting"] = acct
+        if self.gauges:    # key present only when health gauges were on
+            out["gauges"] = [[g.t, g.name, g.value] for g in self.gauges]
         return out
 
     def save(self, path: str) -> str:
@@ -211,6 +229,8 @@ class Trace:
                                   wire_time=wire, retried=bool(retried)))
         for t, rnd, v in d.get("evals", []):
             tr.record_eval(t, rnd, v)
+        for t, name, v in d.get("gauges", []):
+            tr.record_gauge(t, name, v)
         return tr
 
 

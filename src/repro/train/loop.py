@@ -7,13 +7,14 @@ This is the host-side orchestration layer; the math lives in
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Iterable
 
 import jax
 import numpy as np
 
-from repro import compat
+from repro import compat, telemetry
 from repro.core.decentralized import StepMetrics, TrainState, init_state, make_train_step
 from repro.core.gossip import GossipSpec
 from repro.optim import Optimizer
@@ -118,10 +119,24 @@ def train(
     it = iter(batches)
     pending: list[StepMetrics] = []
     t_win = time.perf_counter()
+    # Telemetry rides the existing amortized boundaries: one emit batch per
+    # log window (inside flush), nothing per step. With the null sink the
+    # only cost is this truthiness check — the numerics are untouched either
+    # way, so instrumented-but-disabled train() bit-matches plain train().
+    tel = telemetry.get()
 
     def flush() -> None:
         nonlocal t_win
-        hist.extend_from_device(pending, t_win)
+        n = len(pending)
+        if tel.active and n:
+            with tel.span("train.host_sync", steps=n):
+                hist.extend_from_device(pending, t_win)
+            dur = time.perf_counter() - t_win
+            tel.complete("train.window", tel.now() - dur, dur, steps=n)
+            tel.counter("train.steps", n)
+            tel.gauge("train.loss", hist.loss[-1])
+        else:
+            hist.extend_from_device(pending, t_win)
         pending.clear()
         t_win = time.perf_counter()
 
@@ -146,9 +161,11 @@ def train(
                 if ckpt_path and ckpt_every and (k + 1) % ckpt_every == 0:
                     flush()
                     writer.save(ckpt_path, state.params, step=k + 1, **ckpt_kw)
+                    tel.counter("train.checkpoints")
         flush()
         if ckpt_path:
             writer.save(ckpt_path, state.params, step=steps, **ckpt_kw)
+            tel.counter("train.checkpoints")
         if writer is not None:
             writer.close()        # surfaces background write errors
     except BaseException:
@@ -342,6 +359,8 @@ def run_simulated(
     degrade_mode: str = "reabsorb",
     recovery: RecoveryPolicy | None = None,
     fault_inject: Callable[[int, int, int], bool] | None = None,
+    health: "bool | object" = False,
+    run_dir: str | None = None,
 ) -> SimRun:
     """Train under virtual wall-clocks on the discrete-event simulator.
 
@@ -384,6 +403,18 @@ def run_simulated(
         from the last consensus checkpoint once retries exhaust). Passing
         either enables the recovery manager; its counters land in
         ``trace.meta['recovery']``.
+      health: emit gossip-health gauges (spectral gap / effective number of
+        neighbors of the ACTIVE — survivor-repaired, fault-blocked — mixing
+        matrix) onto the trace timeline at t=0 and on every matrix-changing
+        event. True for defaults, or a ``telemetry.HealthConfig``. Gauges
+        are excluded from ``Trace.signature()``, so determinism tests and
+        signature bit-match guarantees are unaffected.
+      run_dir: if set, export the full telemetry bundle there —
+        ``trace.json`` (provenance-stamped meta), ``perfetto.json``
+        (Chrome-trace timeline, loadable at ui.perfetto.dev), and
+        ``telemetry.json`` when a telemetry sink is active. Summarize with
+        ``python -m repro.telemetry.report <run_dir>``. Implies saving the
+        trace even without ``trace_path``.
     """
     from repro import sim
 
@@ -421,7 +452,7 @@ def run_simulated(
         mgr = _RecoveryManager(recovery or RecoveryPolicy(), executor,
                                fault_inject)
         proto.recovery = mgr
-    eng = sim.Engine(gossip.topology, scenario, mesh=mesh)
+    eng = sim.Engine(gossip.topology, scenario, mesh=mesh, health=health)
     if mgr is not None:
         mgr.engine = eng
     try:
@@ -432,7 +463,25 @@ def run_simulated(
             mgr.close()
     if mgr is not None:
         eng.trace.meta["recovery"] = dict(mgr.stats)
+        tel = telemetry.get()
+        if tel.active:
+            for k, v in mgr.stats.items():
+                tel.counter(f"recovery.{k}", v)
     if trace_path:
         eng.trace.save(trace_path)
+    if run_dir:
+        from repro.telemetry.perfetto import save_perfetto
+
+        eng.trace.meta["provenance"] = telemetry.provenance(
+            config=dict(protocol=protocol, rounds=rounds,
+                        topology=gossip.topology.name,
+                        M=gossip.topology.M,
+                        scenario=eng.scenario.describe()),
+            writer="run_simulated")
+        eng.trace.save(os.path.join(run_dir, "trace.json"))
+        save_perfetto(eng.trace, os.path.join(run_dir, "perfetto.json"))
+        tel = telemetry.get()
+        if tel.active:
+            tel.save(os.path.join(run_dir, "telemetry.json"))
     return SimRun(params=executor.W, opt_state=executor.opt, trace=eng.trace,
                   rounds=proto.rounds.copy(), virtual_time=eng.clock)
