@@ -326,6 +326,40 @@ class Engine:
             if self.health is not None and ev.kind in (
                     FAIL, JOIN, SWITCH, LINK_DOWN, LINK_UP):
                 self._emit_health()
+            if ev.kind == COMPUTE_DONE and \
+                    getattr(protocol, "batch_commits", False):
+                # hand the protocol the whole run of same-instant same-round
+                # completions at once (it commits them through one vmapped
+                # step); epoch-stale members are dropped exactly as the
+                # sequential loop would, and per-event bookkeeping inside
+                # handle_batch preserves heap order, so traces bit-match
+                batch = [ev]
+                while self._heap and (
+                        max_events is None or
+                        processed + len(batch) < max_events):
+                    nxt = self._heap[0][2]
+                    if nxt.time != ev.time or nxt.kind != COMPUTE_DONE or \
+                            nxt.round != ev.round:
+                        break
+                    heapq.heappop(self._heap)
+                    if nxt.epoch != self.epoch[nxt.worker]:
+                        continue  # cancelled by churn — same as the solo path
+                    batch.append(nxt)
+                if len(batch) > 1:
+                    infos = protocol.handle_batch(batch)
+                    for bev, binfo in zip(batch, infos):
+                        binfo = binfo or {}
+                        if binfo.get("skip"):
+                            continue
+                        self.trace.record(trace_lib.TraceRecord(
+                            seq=bev.seq, t=bev.time, kind=bev.kind,
+                            worker=bev.worker, src=bev.src, round=bev.round,
+                            loss=binfo.get("loss"),
+                            link_class=bev.link_class, nbytes=bev.nbytes,
+                            wire_time=bev.wire_time,
+                            retried=bev.retried or bool(binfo.get("failed"))))
+                        processed += 1
+                    continue
             info = protocol.handle(ev) or {}
             if info.get("skip"):
                 # a no-op event (e.g. a TIMEOUT whose barrier had already

@@ -1,17 +1,18 @@
 """Pluggable consensus protocols executed by the event engine.
 
-All three protocols speak the same engine API (``bind`` / ``start`` /
-``handle``) and drive *real* JAX train steps over a stacked parameter pytree
-(leading worker dim M, the same layout as ``repro.core.decentralized``):
+All protocols speak the same engine API (``bind`` / ``start`` / ``handle``)
+and drive *real* JAX train steps over a stacked parameter pytree (leading
+worker dim M, the same layout as ``repro.core.decentralized``):
 
 * :class:`SyncGossip` — the paper's synchronous local-barrier DSM: worker j
   starts round k+1 only once every in-neighbor's round-k estimate has
-  arrived. Values are computed with the *actual* ``make_train_step`` (the
-  same jitted program the non-simulated loop runs), so under deterministic
-  compute times the parameter trajectory bit-matches ``train()``. The
-  trajectory of synchronous gossip is provably schedule-independent — only
-  the *clock* feels the stragglers — which is exactly the paper's Fig. 5
-  argument.
+  arrived. Commits run a compiled *per-slice* step (gradient at w_j(k−1) →
+  full-M column mix over the round-(k−1) snapshot plane → update) that is
+  bit-identical to slice j of the full ``make_train_step`` program, so under
+  deterministic compute times the trajectory still bit-matches ``train()``
+  at O(M) — not O(M²) — gradient cost per round. The trajectory of
+  synchronous gossip is provably schedule-independent — only the *clock*
+  feels the stragglers — which is exactly the paper's Fig. 5 argument.
 * :class:`AsyncPairwise` — AD-PSGD-style (Lian et al., 2018): no barrier;
   each worker loops compute → apply update → average pairwise with one
   random out-neighbor (atomically, when the message lands). Gradients are
@@ -28,11 +29,42 @@ All three protocols speak the same engine API (``bind`` / ``start`` /
 ``executor=None`` runs any protocol in timing-only mode (no values — the
 legacy ``straggler.simulate`` fast path).
 
-Per-worker value ops touch single slices (``x[j]`` / ``x.at[j].set``) of the
-stacked state; the sync protocol additionally relies on the fact that slice
-j of the vmapped/einsum train step depends only on the slices with nonzero
-consensus weight, so feeding it a stack whose *irrelevant* rows are mid-round
-does not perturb worker j's bits.
+Fleet-scale commit architecture (sync / hier)
+---------------------------------------------
+Three structures keep per-round cost O(M):
+
+* **Snapshot planes** (:class:`SnapPlanes`): broadcast estimates live as
+  rows of a small ring of device-stacked (M, ...) buffers — plane
+  ``k % depth`` holds the round-k snapshots, written in place with donated
+  row updates. Because worker j's own row of plane k−1 is untouched between
+  its round-(k−1) broadcast and its round-k commit, the *entire plane* is
+  the mix source for a completed barrier: zero per-commit stack assembly
+  (rows with zero consensus weight may hold other rounds; slice j of the
+  einsum/tensordot mix depends only on the nonzero-weight rows — they
+  contribute ±0.0). Directed topologies can spread rounds wider than the
+  ring; still-referenced rows about to be overwritten are spilled to a
+  side dict and patched back in on the (rare) slow path.
+* **Countdown barriers**: per-worker in-degree countdown arrays plus
+  preallocated uint64 bitmask rows replace the per-round dict-of-sets
+  bookkeeping — O(1) per arrival, O(M/64) per commit, nothing grows with
+  the round count.
+* **Batched commits**: when several workers' barriers complete at the same
+  virtual instant (the common case under deterministic compute times) the
+  engine hands the whole run of COMPUTE_DONE events to
+  :meth:`SyncGossip.handle_batch`, which commits them through ONE jitted
+  vmapped per-slice step (stacked gather → vmapped grad/update → subset
+  -column einsum mix against the plane → one scatter, donated state) —
+  split into power-of-two buckets so at most log2(M)+1 programs are ever
+  traced. Event bookkeeping (sends, barrier re-arms, trace records) still
+  runs per event in heap order, so batched and unbatched runs produce
+  bit-identical traces.
+
+``commit='full'`` keeps the pre-refactor reference path — the full M-row
+``make_train_step`` program per commit — for cross-checking; the tier-1
+suite asserts the per-slice default reproduces it bit for bit. (The one
+known exception: ``adafactor_like`` factors its second moment across the
+stacked worker axis for originally-1D leaves, so its update is not
+worker-elementwise — use ``commit='full'`` for bit-exactness there.)
 """
 from __future__ import annotations
 
@@ -46,21 +78,43 @@ from repro.sim.trace import (ARRIVAL, COMPUTE_DONE, FAIL, JOIN, SWITCH,
 PyTree = Any
 
 
+def _popcount(row: np.ndarray) -> int:
+    """Number of set bits in a uint64 bitmask row."""
+    return int.from_bytes(row.tobytes(), "little").bit_count()
+
+
 class BatchCache:
     """Random access over a sequential batch iterator, memoized by step.
 
     Workers at different rounds (async protocols) draw batch(k) out of
-    order; the cache replays the iterator's deterministic sequence. Batches
-    are kept for the whole run — sized for simulation-scale problems.
-    """
+    order; the cache replays the iterator's deterministic sequence. Steps
+    below the retirement watermark — the minimum outstanding round across
+    live workers, advanced by the protocols after every commit — are
+    dropped so long fleet-scale runs hold O(round spread) batches instead
+    of O(total rounds); re-accessing a retired step raises."""
 
     def __init__(self, batches):
         self._it = iter(batches)
-        self._cache: list[PyTree] = []
+        self._cache: dict[int, PyTree] = {}
+        self._next = 0   # first step not yet pulled from the iterator
+        self._floor = 0  # retirement watermark: steps < floor raise
+
+    @property
+    def floor(self) -> int:
+        return self._floor
+
+    def __len__(self) -> int:
+        return len(self._cache)
 
     def get(self, k: int) -> PyTree:
-        while len(self._cache) <= k:
-            self._cache.append(next(self._it))
+        if k < self._floor:
+            raise RuntimeError(
+                f"batch {k} was retired (watermark {self._floor}): steps "
+                "below the minimum outstanding round across live workers "
+                "are dropped to bound memory — see BatchCache.retire_below")
+        while self._next <= k:
+            self._cache[self._next] = next(self._it)
+            self._next += 1
         return self._cache[k]
 
     def slice(self, k: int, j: int) -> PyTree:
@@ -68,9 +122,17 @@ class BatchCache:
 
         return jax.tree.map(lambda x: x[j], self.get(k))
 
+    def retire_below(self, floor: int) -> None:
+        """Drop every cached step < floor (monotone; lowering is a no-op)."""
+        if floor <= self._floor:
+            return
+        for i in range(self._floor, min(floor, self._next)):
+            self._cache.pop(i, None)
+        self._floor = floor
+
 
 class TrainExecutor:
-    """Stacked train state + the jitted per-slice value operations."""
+    """Stacked train state + the jitted per-slice / batched value ops."""
 
     def __init__(self, loss_fn: Callable, optimizer, params0: PyTree,
                  batches, gossip):
@@ -96,9 +158,15 @@ class TrainExecutor:
         self._get = jax.jit(lambda T, j: jax.tree.map(lambda x: x[j], T))
         self._set = jax.jit(
             lambda T, j, v: jax.tree.map(lambda x, y: x.at[j].set(y), T, v))
+        # donated variant: reuses the target's buffers in place — only for
+        # targets whose old reference is discarded (W / opt / plane commits)
+        self._set_d = jax.jit(
+            lambda T, j, v: jax.tree.map(lambda x, y: x.at[j].set(y), T, v),
+            donate_argnums=0)
         self._commit = jax.jit(
             lambda old, new, j: jax.tree.map(
-                lambda o, n: o.at[j].set(n[j]), old, new))
+                lambda o, n: o.at[j].set(n[j]), old, new),
+            donate_argnums=0)
         self._add = jax.jit(
             lambda w, u: jax.tree.map(lambda a, b: a + b.astype(a.dtype), w, u))
         self._mixcol = jax.jit(
@@ -109,6 +177,17 @@ class TrainExecutor:
             lambda T, i, j: jax.tree.map(
                 lambda x: x.at[i].set(x[i] / 2 + x[j] / 2)
                            .at[j].set(x[i] / 2 + x[j] / 2), T))
+        # snapshot-plane row writes (donated: in-place on the plane buffers)
+        self._copy_row = jax.jit(
+            lambda dst, src, j: jax.tree.map(
+                lambda d, s: d.at[j].set(s[j]), dst, src),
+            donate_argnums=0)
+        self._copy_rows = jax.jit(
+            lambda dst, src, js: jax.tree.map(
+                lambda d, s: d.at[js].set(s[js]), dst, src),
+            donate_argnums=0)
+        self._bstep = jax.jit(self._make_batch_step(), donate_argnums=(0, 1),
+                              static_argnums=7)
         self._step_fn = None
         self._step_fn_topo = None
 
@@ -119,6 +198,11 @@ class TrainExecutor:
 
     def set_slice(self, T: PyTree, j: int, v: PyTree) -> PyTree:
         return self._set(T, j, v)
+
+    def set_slice_(self, T: PyTree, j: int, v: PyTree) -> PyTree:
+        """Donated set_slice: T's buffers are reused — T must not be read
+        again (commit writes to W/opt where the old ref is replaced)."""
+        return self._set_d(T, j, v)
 
     def loss_and_grad(self, w: PyTree, batch: PyTree):
         return self._vg1(w, batch)
@@ -144,7 +228,91 @@ class TrainExecutor:
         w = np.ones(self.M) if mask is None else mask.astype(np.float64)
         return self._mixcol(self.W, w / w.sum())
 
-    # -- the real synchronous train step (sync protocol) ------------------
+    # -- snapshot planes --------------------------------------------------
+
+    def make_planes(self, depth: int) -> list[PyTree]:
+        """Ring of `depth` device-stacked snapshot buffers; plane 0 is
+        seeded with a copy of W (the shared round-0 broadcast)."""
+        import jax
+        import jax.numpy as jnp
+
+        first = jax.tree.map(lambda x: jnp.array(x, copy=True), self.W)
+        return [first] + [jax.tree.map(jnp.zeros_like, self.W)
+                          for _ in range(depth - 1)]
+
+    def write_row(self, plane: PyTree, j: int) -> PyTree:
+        """Snapshot W[j] into plane row j (donated in-place write)."""
+        return self._copy_row(plane, self.W, j)
+
+    def write_rows(self, plane: PyTree, js: np.ndarray) -> PyTree:
+        import jax.numpy as jnp
+
+        return self._copy_rows(plane, self.W, jnp.asarray(js, jnp.int32))
+
+    # -- the batched per-slice commit -------------------------------------
+
+    def _make_batch_step(self):
+        import jax
+        import jax.numpy as jnp
+
+        loss_fn, optimizer = self.loss_fn, self.optimizer
+
+        def bstep(W, opt, source, Amat, batch, js, step, n_write):
+            # One vmapped per-slice step for the workers `js`, all of whose
+            # barriers completed at the same virtual instant. `source` is the
+            # round-(k-1) snapshot plane; `Amat` the full (M, M) consensus
+            # matrix (possibly survivor-repaired). Mirrors
+            # make_train_step(mode='gossip', mix_first=True) slice by slice
+            # INSIDE one jit: XLA folds the optimizer scale and the post-mix
+            # add into fused multiply-adds, and the mix must run the very
+            # same full-shape dot as the reference program (a (M, J) subset
+            # contraction accumulates differently for some columns), so the
+            # full M-row mix is computed and rows `js` gathered — that
+            # combination is bit-identical to the full program's rows.
+            # `n_write` (static): rows of the result actually committed —
+            # a single-worker commit pads `js` to [j, j] and writes one row,
+            # because a J=1 program collapses the mix to a vector dot with
+            # yet another accumulation order.
+            ws = jax.tree.map(lambda x: x[js], W)
+            opts = jax.tree.map(lambda x: x[js], opt)
+            bjs = jax.tree.map(lambda x: x[js], batch)
+            losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(ws, bjs)
+            updates, opts2 = optimizer.update(grads, opts, ws, step)
+            mixed = jax.tree.map(
+                lambda x: jnp.einsum("im,i...->m...",
+                                     Amat.astype(x.dtype), x)[js],
+                source)
+            new_ws = jax.tree.map(lambda m, u: m + u.astype(m.dtype),
+                                  mixed, updates)
+            wjs = js[:n_write]
+            W2 = jax.tree.map(lambda x, v: x.at[wjs].set(v[:n_write]),
+                              W, new_ws)
+            opt2 = jax.tree.map(lambda x, v: x.at[wjs].set(v[:n_write]),
+                                opt, opts2)
+            return W2, opt2, losses
+
+        return bstep
+
+    def commit_batch(self, js: np.ndarray, k: int, Amat,
+                     source: PyTree) -> np.ndarray:
+        """Commit workers `js`' round k through one vmapped per-slice step
+        (donated stacked state) mixing over `source` with the (M, M) matrix
+        `Amat`; returns their local losses.
+
+        Callers bucket `js` into power-of-two sizes so at most log2(M)+2
+        distinct shapes are ever traced (the J=1 bucket pads to [j, j])."""
+        import jax.numpy as jnp
+
+        js_arr = np.asarray(js)
+        n = len(js_arr)
+        gjs = np.array([js_arr[0], js_arr[0]]) if n == 1 else js_arr
+        self.W, self.opt, losses = self._bstep(
+            self.W, self.opt, source, jnp.asarray(Amat),
+            self.batches.get(k - 1), jnp.asarray(gjs, jnp.int32),
+            jnp.asarray(k - 1, jnp.int32), n)
+        return np.asarray(losses)[:n]
+
+    # -- the real synchronous train step (commit='full' reference) ---------
 
     def step_fn(self, topology=None):
         """The jitted ``make_train_step`` program — the same computation the
@@ -166,10 +334,94 @@ class TrainExecutor:
         return self._step_fn
 
 
+class SnapPlanes:
+    """Round-tagged ring of device-stacked snapshot planes (see module
+    docstring): plane ``k % depth`` row j holds worker j's round-k broadcast
+    estimate, written in place with donated row updates. ``tag[j, slot]``
+    records which round a row currently holds; rows that are still
+    referenced when their slot wraps around are spilled to a side dict and
+    patched back in at mix time (rare — only directed topologies spread
+    rounds past the ring depth)."""
+
+    def __init__(self, ex: TrainExecutor, depth: int):
+        self.ex = ex
+        self.depth = depth
+        self.planes = ex.make_planes(depth)
+        self.tag = np.full((ex.M, depth), -1, dtype=np.int64)
+        self.tag[:, 0] = 0  # plane 0 seeded with W — everyone's round 0
+        # (worker, round) -> consumers that have not yet mixed the snapshot
+        self.refs: dict[tuple[int, int], set[int]] = {}
+        # (worker, round) -> snapshot evicted from its plane row while
+        # still referenced (ring overrun on directed topologies)
+        self.spill: dict[tuple[int, int], PyTree] = {}
+
+    def publish(self, j: int, k: int, consumers) -> None:
+        """Record W[j] as worker j's round-k estimate (row write + refs).
+        Idempotent on the row: a batched pre-write leaves only the refs."""
+        s = k % self.depth
+        old = int(self.tag[j, s])
+        if old != k:
+            if old >= 0 and self.refs.get((j, old)):
+                self.spill[(j, old)] = self.ex.get_slice(self.planes[s], j)
+            self.planes[s] = self.ex.write_row(self.planes[s], j)
+            self.tag[j, s] = k
+        if consumers:
+            self.refs[(j, k)] = set(consumers)
+
+    def publish_rows(self, js: np.ndarray, k: int) -> None:
+        """Batched row write for workers `js`' round-k estimates (no refs —
+        the per-worker broadcast loop attaches them via :meth:`publish`)."""
+        s = k % self.depth
+        for j in js:
+            old = int(self.tag[j, s])
+            if old >= 0 and old != k and self.refs.get((int(j), old)):
+                self.spill[(int(j), old)] = self.ex.get_slice(self.planes[s], j)
+        self.planes[s] = self.ex.write_rows(self.planes[s], js)
+        self.tag[js, s] = k
+
+    def in_plane(self, i: int, r: int) -> bool:
+        return self.tag[i, r % self.depth] == r
+
+    def has(self, i: int, r: int) -> bool:
+        return self.tag[i, r % self.depth] == r or (i, r) in self.spill
+
+    def row(self, i: int, r: int) -> PyTree:
+        if self.in_plane(i, r):
+            return self.ex.get_slice(self.planes[r % self.depth], i)
+        return self.spill[(i, r)]
+
+    def source(self, r: int, fix_rows=()) -> PyTree:
+        """The M-row mix source for round r: the plane itself on the fast
+        path; with `fix_rows` ((i, snapshot) pairs: spilled or cross-pod
+        stale rows) patched into a copy — the plane is never mutated."""
+        S = self.planes[r % self.depth]
+        for i, v in fix_rows:
+            S = self.ex.set_slice(S, i, v)
+        return S
+
+    def release(self, i: int, r: int, consumer: int) -> None:
+        refs = self.refs.get((i, r))
+        if refs is None:
+            return
+        refs.discard(consumer)
+        if not refs:
+            del self.refs[(i, r)]
+            self.spill.pop((i, r), None)
+
+    def release_consumer(self, consumer: int) -> None:
+        """Drop a dead worker's claims on every outstanding snapshot."""
+        for (i, r) in list(self.refs):
+            self.release(i, r, consumer)
+
+
 class Protocol:
     """Engine-facing protocol interface; see module docstring."""
 
     name = "protocol"
+    # engine hint: COMPUTE_DONE runs at equal (time, round) may be handed to
+    # handle_batch as one group (SyncGossip turns this on when batching is
+    # safe — executor attached, per-slice commits, no recovery manager)
+    batch_commits = False
 
     def __init__(self, executor: TrainExecutor | None = None, *,
                  eval_fn: Callable[[PyTree], float] | None = None,
@@ -210,6 +462,11 @@ class Protocol:
     def handle(self, ev) -> dict | None:
         raise NotImplementedError
 
+    def handle_batch(self, evs) -> list[dict | None]:
+        """Process a run of same-instant events (engine batching hook);
+        the default is the sequential semantics, one by one."""
+        return [self.handle(ev) for ev in evs]
+
     def _past_stop(self, k: int) -> bool:
         return self.stop_round is not None and k > self.stop_round
 
@@ -232,6 +489,26 @@ class Protocol:
     def _after_commit(self, j: int, k: int) -> None:
         if self.recovery is not None and self.executor is not None:
             self.recovery.after_commit(j, k)
+        self._retire_batches()
+
+    # whether a dead worker's outstanding round can be ignored by batch
+    # retirement: barrier protocols fast-forward rejoiners to the live
+    # fleet's round, so only live workers pin old batches; async/stale
+    # rejoiners resume at their frozen round and keep their batches pinned
+    retire_over_live_only = False
+
+    def _retire_batches(self) -> None:
+        """Advance the BatchCache watermark to the minimum outstanding round
+        across workers that can still draw old steps — steps below it can
+        never be requested again."""
+        if self.executor is None:
+            return
+        alive = self.engine.alive
+        if self.retire_over_live_only and alive.any():
+            floor = int(self.rounds[alive].min())
+        else:
+            floor = int(self.rounds.min())
+        self.executor.batches.retire_below(floor)
 
     def _accumulate_round_eval(self, j: int, k: int) -> None:
         """Round-synchronous eval (barrier protocols): once every worker
@@ -273,8 +550,16 @@ class Protocol:
 
 
 class _BarrierGossip(Protocol):
-    """Snapshot ref-counting plus the optional timeout/degrade path that
-    makes a local barrier churn-capable.
+    """Countdown-array barrier bookkeeping, the snapshot-plane store, and
+    the optional timeout/degrade path that makes a local barrier
+    churn-capable.
+
+    Commit modes: ``commit='slice'`` (default) runs the compiled per-slice
+    step per commit — O(M) gradient work per round — and, with
+    ``commit_batch=True``, lets the engine batch same-instant completions
+    through one vmapped step. ``commit='full'`` is the pre-refactor
+    reference: the full M-row program (sync) / the W-based stack assembly
+    (hier) per commit, kept for bit-match cross-checks.
 
     With ``barrier_timeout=None`` (the default) the barrier is strict —
     behaviour is bit-identical to the fault-oblivious protocol, and churn
@@ -292,7 +577,10 @@ class _BarrierGossip(Protocol):
                  eval_fn: Callable[[PyTree], float] | None = None,
                  eval_every: int = 0,
                  barrier_timeout: float | None = None,
-                 degrade_mode: str = "reabsorb"):
+                 degrade_mode: str = "reabsorb",
+                 commit: str = "slice",
+                 commit_batch: bool = True,
+                 snap_depth: int = 4):
         super().__init__(executor, eval_fn=eval_fn, eval_every=eval_every)
         if barrier_timeout is not None and not barrier_timeout > 0.0:
             raise ValueError(
@@ -301,8 +589,20 @@ class _BarrierGossip(Protocol):
             raise ValueError(
                 f"degrade_mode must be 'reabsorb' or 'renormalize', "
                 f"got {degrade_mode!r}")
+        if commit not in ("slice", "full"):
+            raise ValueError(
+                f"commit must be 'slice' or 'full', got {commit!r}")
+        if snap_depth < 2:
+            raise ValueError(
+                f"snap_depth must be >= 2 (the round-k plane is written "
+                f"while round k-1 is still the mix source), got {snap_depth}")
         self.barrier_timeout = barrier_timeout
         self.degrade_mode = degrade_mode
+        self.commit_mode = commit
+        self.commit_batching = commit_batch
+        self.snap_depth = snap_depth
+
+    retire_over_live_only = True  # rejoiners fast-forward past dead rounds
 
     @property
     def supports_churn(self) -> bool:
@@ -310,27 +610,67 @@ class _BarrierGossip(Protocol):
 
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
-        self._arrived: dict[tuple[int, int], set[int]] = {}
-        self._started: set[tuple[int, int]] = set()
-        self._degraded: set[tuple[int, int]] = set()
-        self._armed: set[tuple[int, int]] = set()
-        self._bcast: set[tuple[int, int]] = set()
-        self._snaps: dict[tuple[int, int], PyTree] = {}
-        # (worker, round) -> consumers that have not yet released the snap
-        self._refs: dict[tuple[int, int], set[int]] = {}
+        M = engine.M
+        self._A = np.asarray(engine.topology.A, dtype=np.float64)
+        if self.executor is not None:
+            import jax.numpy as jnp
+            self._A_dev = jnp.asarray(self._A)  # transferred once, reused
+        # barrier state for round rounds[j] (the one gating round rounds[j]+1):
+        # missing-arrival countdown + arrived-source bitmask row
+        self._cnt = np.zeros(M, dtype=np.int64)
+        self._mask = np.zeros((M, (M + 63) // 64), dtype=np.uint64)
+        # arrivals for rounds ahead of the barrier (directed-topology spread):
+        # (worker, round) -> uint64 bitmask row
+        self._future: dict[tuple[int, int], np.ndarray] = {}
+        # monotone per-worker round markers replacing the old (j, k) sets —
+        # a worker only ever starts/arms/degrades round rounds[j]+1
+        self._started_r = np.zeros(M, dtype=np.int64)
+        self._degraded_r = np.full(M, -1, dtype=np.int64)
+        self._armed_r = np.full(M, -1, dtype=np.int64)
+        self._bcast_r = np.full(M, -1, dtype=np.int64)
+        self._snaps = SnapPlanes(self.executor, self.snap_depth) \
+            if self.executor is not None else None
         scen = engine.scenario
         self._timeouts_active = self.barrier_timeout is not None and \
             (scen.has_churn or scen.has_link_faults)
 
-    # -- snapshot bookkeeping ---------------------------------------------
+    # -- countdown / bitmask barrier --------------------------------------
 
-    def _release_snap(self, i: int, k: int, consumer: int) -> None:
-        refs = self._refs.get((i, k))
-        if refs is None:
-            return
-        refs.discard(consumer)
-        if not refs:
-            del self._refs[(i, k)], self._snaps[(i, k)]
+    def _note_arrival(self, j: int, src: int, r: int) -> None:
+        """O(1) arrival bookkeeping: decrement the countdown for the current
+        barrier round, or park the bit for a future round."""
+        base = int(self.rounds[j])
+        w, b = src >> 6, np.uint64(1 << (src & 63))
+        if r == base:
+            if not (self._mask[j, w] & b):
+                self._mask[j, w] |= b
+                self._cnt[j] -= 1
+        elif r > base:
+            m = self._future.get((j, r))
+            if m is None:
+                m = self._future[(j, r)] = np.zeros(self._mask.shape[1],
+                                                    dtype=np.uint64)
+            m[w] |= b
+        # r < base: late arrival for a committed round (timeout/rejoin) — drop
+
+    def _arrived_bit(self, j: int, i: int) -> bool:
+        return bool(self._mask[j, i >> 6] & np.uint64(1 << (i & 63)))
+
+    def _advance(self, j: int, k: int) -> None:
+        """Commit bookkeeping: worker j finished round k — rotate its
+        barrier state to round k (promoting any parked future arrivals)."""
+        self.rounds[j] = k
+        m = self._future.pop((j, k), None)
+        if m is None:
+            self._mask[j, :] = 0
+            self._cnt[j] = self._in_deg[j]
+        else:
+            self._mask[j] = m
+            self._cnt[j] = self._in_deg[j] - _popcount(m)
+        self._degraded_r[j] = -1
+
+    def _barrier_met(self, j: int) -> bool:
+        return self._cnt[j] == 0
 
     # -- timeout / degrade ------------------------------------------------
 
@@ -338,26 +678,27 @@ class _BarrierGossip(Protocol):
         """Arm the round-k barrier deadline for worker j (no-op when
         timeouts are inactive, the round already started, or past stop)."""
         if not self._timeouts_active or self._past_stop(k) or \
-                (j, k) in self._started or (j, k) in self._armed:
+                self._started_r[j] >= k or self._armed_r[j] == k:
             return
         eng = self.engine
         eng.schedule(eng.clock + self.barrier_timeout, TIMEOUT, j, round=k)
-        self._armed.add((j, k))
+        self._armed_r[j] = k
 
     def _handle_timeout(self, j: int, k: int) -> dict | None:
         """Barrier deadline fired: if worker j is still waiting to start
         round k, start the compute in *degraded* mode (commit will mix over
         whatever snapshots arrived). Deadlines that were overtaken by the
         barrier completing are skipped without being traced."""
-        self._armed.discard((j, k))
+        if self._armed_r[j] == k:
+            self._armed_r[j] = -1
         eng = self.engine
-        if self._past_stop(k) or (j, k) in self._started or \
+        if self._past_stop(k) or self._started_r[j] >= k or \
                 self.rounds[j] != k - 1 or not eng.alive[j]:
             return {"skip": True}
-        self._degraded.add((j, k))
+        self._degraded_r[j] = k
         eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
                      round=k)
-        self._started.add((j, k))
+        self._started_r[j] = k
         return None
 
     # -- churn ------------------------------------------------------------
@@ -368,14 +709,11 @@ class _BarrierGossip(Protocol):
         already-broadcast snapshots stay — surviving consumers still mix
         them. Round-eval accumulators f was the last holdout of are
         flushed so the eval curve keeps flowing."""
-        for key in [key for key in self._started if key[0] == f]:
-            self._started.discard(key)
-        for key in [key for key in self._degraded if key[0] == f]:
-            self._degraded.discard(key)
-        for key in [key for key in self._armed if key[0] == f]:
-            self._armed.discard(key)
-        for (i, k) in list(self._refs):
-            self._release_snap(i, k, f)
+        self._started_r[f] = self.rounds[f]
+        self._degraded_r[f] = -1
+        self._armed_r[f] = -1
+        if self._snaps is not None:
+            self._snaps.release_consumer(f)
         for k in sorted(self._round_acc):
             pending = self.engine.alive & (self.rounds < k)
             if not pending.any():
@@ -390,13 +728,17 @@ class _BarrierGossip(Protocol):
         alive = self.engine.alive
         if alive.any():
             r = max(r, int(self.rounds[alive].max()))
-        for key in [key for key in self._arrived
+        for key in [key for key in self._future
                     if key[0] == j and key[1] < r]:
-            del self._arrived[key]
-        self.rounds[j] = r
+            del self._future[key]
+        if r != int(self.rounds[j]):
+            # fast-forward rotates the barrier to round r (promoting parked
+            # arrivals); when j is already at the live fleet's round, its
+            # current barrier state — arrivals landed while down — stays
+            self._advance(j, r)
         if self.recovery is not None and self.executor is not None:
             self.recovery.on_rejoin(j)
-        self._broadcast(j, r)          # idempotent via the _bcast guard
+        self._broadcast(j, r)          # idempotent via the _bcast_r guard
         self._maybe_start(j, r + 1)
         self._arm_timeout(j, r + 1)
 
@@ -410,12 +752,15 @@ class SyncGossip(_BarrierGossip):
     """w_j(k+1) = Σ_i A_ij w_i(k) − η g_j(w_j(k)); round k+1 starts at
     max_{i∈N_j∪{j}} t_i(k) (+ link delay) — the paper's time recursion.
 
-    Each completion runs the full M-row ``make_train_step`` program and
-    commits one row — O(M²) row-gradients per round. That redundancy is the
-    price of the bit-match guarantee (the sim executes the *identical*
-    compiled step the train loop runs); it is deliberate and sized for
-    simulation-scale problems. Timing-only mode (``executor=None``) skips
-    all value work and runs at ~50k events/s.
+    Each completion runs a compiled *per-slice* step: gradient at w_j(k−1),
+    full-M column mix over the round-(k−1) snapshot plane, one-row commit —
+    O(M) gradient work per round, bit-identical to slice j of the full
+    ``make_train_step`` program (slice j of the vmapped/einsum step depends
+    only on the rows with nonzero consensus weight). Same-instant
+    completions are additionally batched through ONE vmapped per-slice step
+    by the engine (see :meth:`handle_batch`); ``commit='full'`` opts back
+    into the O(M²) full-program reference path, asserted bit-equal in CI.
+    Timing-only mode (``executor=None``) skips all value work.
 
     ``barrier_timeout`` (see :class:`_BarrierGossip`) makes the barrier
     churn-capable: a timed-out round commits over the arrived snapshots
@@ -426,8 +771,16 @@ class SyncGossip(_BarrierGossip):
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
         topo = engine.topology
-        self._in_nb = [set(map(int, topo.neighbors_in(j))) for j in range(engine.M)]
-        self._out_nb = [list(map(int, topo.neighbors_out(j))) for j in range(engine.M)]
+        self._in_arr = [np.asarray(sorted(map(int, topo.neighbors_in(j))),
+                                   dtype=np.int64) for j in range(engine.M)]
+        self._out_nb = [list(map(int, topo.neighbors_out(j)))
+                        for j in range(engine.M)]
+        self._in_deg = np.array([len(a) for a in self._in_arr], dtype=np.int64)
+        self._cnt = self._in_deg.copy()  # round-0 barrier: everything missing
+        self.batch_commits = (self.executor is not None
+                              and self.commit_mode == "slice"
+                              and self.commit_batching
+                              and self.recovery is None)
 
     def start(self):
         for j in range(self.engine.M):
@@ -439,10 +792,7 @@ class SyncGossip(_BarrierGossip):
 
     def handle(self, ev):
         if ev.kind == ARRIVAL:
-            if ev.round < self.rounds[ev.worker]:
-                return None  # late arrival for a round already committed
-                             # (possible only after a timeout/rejoin)
-            self._arrived.setdefault((ev.worker, ev.round), set()).add(ev.src)
+            self._note_arrival(ev.worker, ev.src, ev.round)
             self._maybe_start(ev.worker, ev.round + 1)
             return None
         if ev.kind == COMPUTE_DONE:
@@ -459,90 +809,178 @@ class SyncGossip(_BarrierGossip):
         eng = self.engine
         if self._past_stop(k + 1):
             return  # nobody will consume round-k estimates past the stop
-        if (j, k) in self._bcast:
+        if k <= self._bcast_r[j]:
             return  # a rejoin re-announce raced a normal broadcast
-        self._bcast.add((j, k))
-        if self.executor is not None and self._out_nb[j]:
-            self._snaps[(j, k)] = self.executor.get_slice(self.executor.W, j)
-            self._refs[(j, k)] = set(self._out_nb[j])
+        self._bcast_r[j] = k
+        if self._snaps is not None:
+            self._snaps.publish(j, k, self._out_nb[j])
         for o in self._out_nb[j]:
             eng.send(j, o, round=k)
 
     def _maybe_start(self, j: int, k: int) -> None:
-        if self._past_stop(k) or self.rounds[j] != k - 1 or (j, k) in self._started:
-            return
-        if not self._in_nb[j] <= self._arrived.get((j, k - 1), set()):
+        if self._past_stop(k) or self.rounds[j] != k - 1 or \
+                self._started_r[j] >= k or self._cnt[j] != 0:
             return
         eng = self.engine
         eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
                      round=k)
-        self._started.add((j, k))
+        self._started_r[j] = k
 
     def _complete(self, j: int, k: int) -> dict:
         failed = self._maybe_fail_step(j, k)
         if failed is not None:
             return failed
         loss = self._commit(j, k) if self.executor is not None else None
-        self.rounds[j] = k
-        self._arrived.pop((j, k - 1), None)
-        self._started.discard((j, k))
-        self._degraded.discard((j, k))
+        self._advance(j, k)
         self._broadcast(j, k)
         self._maybe_start(j, k + 1)
         self._arm_timeout(j, k + 1)
         self._after_commit(j, k)
         return {"loss": loss}
 
+    # -- batched commits ---------------------------------------------------
+
+    def handle_batch(self, evs) -> list[dict | None]:
+        """Commit a same-instant run of COMPUTE_DONE events through one
+        vmapped per-slice step. Only completed barriers whose snapshots are
+        all plane-resident ride the vmapped path; stragglers of the batch
+        (degraded commits, ring-spilled snapshots) fall back to the
+        sequential handler. All event bookkeeping — sends, barrier re-arms,
+        eval accumulation — still runs per event in heap order, so the
+        trace is bit-identical to an unbatched run."""
+        k = evs[0].round
+        store = self._snaps
+        slot = (k - 1) % store.depth
+        fast = [idx for idx, ev in enumerate(evs)
+                if self._cnt[ev.worker] == 0 and
+                bool(np.all(store.tag[self._in_arr[ev.worker], slot] == k - 1))]
+        if len(fast) < 2:
+            return [self.handle(ev) for ev in evs]
+        fastset = set(fast)
+        js = np.array([evs[idx].worker for idx in fast], dtype=np.int64)
+        losses = self._commit_many(js, k)
+        infos: list[dict | None] = [None] * len(evs)
+        li = 0
+        for idx, ev in enumerate(evs):
+            if idx not in fastset:
+                infos[idx] = self.handle(ev)
+                continue
+            j = ev.worker
+            for i in self._in_arr[j]:
+                store.release(int(i), k - 1, j)
+            self._accumulate_round_eval(j, k)
+            self._advance(j, k)
+            self._broadcast(j, k)
+            self._maybe_start(j, k + 1)
+            self._arm_timeout(j, k + 1)
+            self._after_commit(j, k)
+            infos[idx] = {"loss": float(losses[li])}
+            li += 1
+        return infos
+
+    def _commit_many(self, js: np.ndarray, k: int) -> np.ndarray:
+        """Value work for a batch of completed round-k barriers: power-of-
+        two-bucketed vmapped per-slice steps against the round-(k-1) plane,
+        then one batched plane write publishing the new round-k rows (the
+        per-worker broadcast loop attaches refs and sends afterwards)."""
+        ex, store = self.executor, self._snaps
+        source = store.planes[(k - 1) % store.depth]
+        losses = np.empty(len(js), dtype=np.float64)
+        off = 0
+        while off < len(js):
+            n = 1 << ((len(js) - off).bit_length() - 1)
+            sub = js[off:off + n]
+            losses[off:off + n] = ex.commit_batch(sub, k, self._A_dev, source)
+            off += n
+        if not self._past_stop(k + 1):
+            off = 0
+            while off < len(js):
+                n = 1 << ((len(js) - off).bit_length() - 1)
+                store.publish_rows(js[off:off + n], k)
+                off += n
+        return losses
+
+    # -- single commits ----------------------------------------------------
+
     def _commit(self, j: int, k: int) -> float:
-        """Run the real train step for round k and commit worker j's slice.
+        """Run the round-k value step for worker j and commit its slice.
 
-        Full barrier (every in-neighbor snapshot arrived — the only case in
-        a fault-free run): the exact ``make_train_step`` program, bit-
-        matching the non-simulated loop. Degraded (a timeout fired with
-        snapshots missing): per-slice grad at w_j(k-1), mix over the
-        arrived set with the survivor-repaired column, add the update."""
-        import jax.numpy as jnp
-
-        from repro.core.decentralized import TrainState
+        Per-slice (default): the J=1 case of the fused vmapped step —
+        gradient at w_j(k-1) → column mix over the round-(k-1) snapshot
+        plane (spilled rows patched in) → update, all in ONE jitted
+        program. The fusion matters: XLA folds the optimizer scale and the
+        post-mix add into fused multiply-adds, so only a program with the
+        full program's op structure reproduces its rows bit for bit (split
+        mix/apply jits land one ulp off). Degraded (a timeout fired with
+        snapshots missing): the same program with the survivor-repaired
+        column over the snapshots that did arrive — shared by both commit
+        modes, so slice/full trajectories stay bit-identical under
+        degradation too. commit='full' runs the pre-refactor full M-row
+        ``make_train_step`` reference on completed barriers."""
         from repro.core.topology import survivor_column
 
         ex, eng = self.executor, self.engine
-        arrived = self._arrived.get((j, k - 1), set())
-        have = {i for i in self._in_nb[j]
-                if i in arrived and (i, k - 1) in self._snaps}
-        if self._in_nb[j] <= have:
-            # Assemble the round-(k-1) estimate stack as seen by worker j:
-            # its own current slice + the in-neighbor snapshots that
-            # arrived. Rows with zero consensus weight may be mid-round;
-            # they contribute ±0.0.
-            S = ex.W
-            for i in self._in_nb[j]:
-                S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
-            state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
-            new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
-            ex.W = ex.set_slice(ex.W, j, ex.get_slice(new_state.params, j))
-            ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
-            loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
+        store = self._snaps
+        in_nb = self._in_arr[j]
+        complete = self._cnt[j] == 0 and \
+            all(store.has(int(i), k - 1) for i in in_nb)
+        if self.commit_mode == "full" and complete:
+            return self._commit_full(j, k)
+        if complete:
+            fix = [(int(i), store.spill[(int(i), k - 1)]) for i in in_nb
+                   if not store.in_plane(int(i), k - 1)]
+            Amat = self._A_dev
         else:
-            w_start = ex.get_slice(ex.W, j)
-            l, g = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
-            u, opt_j = ex.update_slice(g, ex.get_slice(ex.opt, j),
-                                       w_start, k - 1)
             keep = np.ones(eng.M, dtype=bool)
-            S = ex.W
-            for i in self._in_nb[j]:
-                if i in have:
-                    S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+            fix = []
+            for i in map(int, in_nb):
+                if self._arrived_bit(j, i) and store.has(i, k - 1):
+                    if not store.in_plane(i, k - 1):
+                        fix.append((i, store.spill[(i, k - 1)]))
                 else:
                     keep[i] = False
-            col = survivor_column(np.array(eng.topology.A[:, j]), j, keep,
-                                  self.degrade_mode)
-            mixed = ex.mix_column(S, col)
-            ex.W = ex.set_slice(ex.W, j, ex.apply(mixed, u))
-            ex.opt = ex.set_slice(ex.opt, j, opt_j)
-            loss = float(l)
-        for i in self._in_nb[j]:
-            self._release_snap(i, k - 1, j)
+            # only column j of the mix output is committed, so repairing
+            # j's column of the full matrix is all the degradation needs
+            Amat = self._A.copy()
+            Amat[:, j] = survivor_column(self._A[:, j].copy(), j, keep,
+                                         self.degrade_mode)
+        S = store.source(k - 1, fix)
+        losses = ex.commit_batch(np.array([j]), k, Amat, S)
+        for i in in_nb:
+            store.release(int(i), k - 1, j)
+        self._accumulate_round_eval(j, k)
+        return float(losses[0])
+
+    def _assemble_from_W(self, j: int, k: int, fix_missing: bool) -> PyTree:
+        """commit='full' degraded source: the pre-refactor W-based stack
+        (current W with the *arrived* round-(k-1) snapshots patched in)."""
+        ex, store = self.executor, self._snaps
+        S = ex.W
+        for i in map(int, self._in_arr[j]):
+            if not fix_missing or (self._arrived_bit(j, i)
+                                   and store.has(i, k - 1)):
+                S = ex.set_slice(S, i, store.row(i, k - 1))
+        return S
+
+    def _commit_full(self, j: int, k: int) -> float:
+        """Reference commit: assemble the round-(k-1) estimate stack as seen
+        by worker j (its own current slice + the in-neighbor snapshots) and
+        run the exact full M-row ``make_train_step`` program, committing one
+        row — O(M²) row-gradients per round. Rows with zero consensus
+        weight may be mid-round; they contribute ±0.0."""
+        import jax.numpy as jnp
+
+        from repro.core.decentralized import TrainState
+
+        ex, store = self.executor, self._snaps
+        S = self._assemble_from_W(j, k, fix_missing=False)
+        state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
+        new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
+        ex.W = ex.set_slice_(ex.W, j, ex.get_slice(new_state.params, j))
+        ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
+        loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
+        for i in self._in_arr[j]:
+            store.release(int(i), k - 1, j)
         self._accumulate_round_eval(j, k)
         return loss
 
@@ -767,6 +1205,12 @@ class HierGossip(_BarrierGossip):
     available); staleness of the DCI terms is the only approximation —
     with zero DCI penalty the trajectory collapses to the paper's DSM.
 
+    Commits are per-slice: with ``commit='slice'`` (default) the mix source
+    is the round-(k-1) snapshot plane with only the (few) cross-pod stale
+    rows patched in; ``commit='full'`` keeps the pre-refactor reference
+    assembly (current W with every neighbor row patched in — O(deg·M)
+    copies per commit).
+
     Needs pod metadata: a mesh-aware engine (MeshSpec group_of) or a
     :func:`~repro.core.topology.kronecker`/``hier`` topology.
 
@@ -793,11 +1237,16 @@ class HierGossip(_BarrierGossip):
         for j in range(engine.M):
             ins = list(map(int, topo.neighbors_in(j)))
             outs = list(map(int, topo.neighbors_out(j)))
-            self._in_intra.append({i for i in ins if g[i] == g[j]})
+            self._in_intra.append(np.asarray(
+                sorted(i for i in ins if g[i] == g[j]), dtype=np.int64))
             self._in_inter.append([i for i in ins if g[i] != g[j]])
             self._out_intra.append([o for o in outs if g[o] == g[j]])
             self._out_inter.append([o for o in outs if g[o] != g[j]])
+        self._in_deg = np.array([len(a) for a in self._in_intra],
+                                dtype=np.int64)
+        self._cnt = self._in_deg.copy()
         # (dst, src) -> (round, snapshot): latest-arrived cross-pod estimate
+        # (bounded: one live entry per cross-pod edge, refreshed in place)
         self._stale: dict[tuple[int, int], tuple[int, PyTree]] = {}
 
     def start(self):
@@ -818,9 +1267,7 @@ class HierGossip(_BarrierGossip):
         if ev.kind == ARRIVAL:
             j, i = ev.worker, ev.src
             if self._g[i] == self._g[j]:       # ICI: barrier bookkeeping
-                if ev.round < self.rounds[j]:
-                    return None  # round already committed (timeout/rejoin)
-                self._arrived.setdefault((j, ev.round), set()).add(i)
+                self._note_arrival(j, i, ev.round)
                 self._maybe_start(j, ev.round + 1)
             elif ev.payload is not None:       # DCI: refresh the stale buffer
                 cur = self._stale.get((j, i))
@@ -841,29 +1288,27 @@ class HierGossip(_BarrierGossip):
         eng, ex = self.engine, self.executor
         if self._past_stop(k + 1):
             return
-        if (j, k) in self._bcast:
+        if k <= self._bcast_r[j]:
             return  # a rejoin re-announce raced a normal broadcast
-        self._bcast.add((j, k))
+        self._bcast_r[j] = k
         snap = None
-        if ex is not None and (self._out_intra[j] or self._out_inter[j]):
-            snap = ex.get_slice(ex.W, j)
-        if ex is not None and self._out_intra[j]:
-            self._snaps[(j, k)] = snap
-            self._refs[(j, k)] = set(self._out_intra[j])
+        if ex is not None:
+            self._snaps.publish(j, k, self._out_intra[j])
+            if self._out_inter[j]:
+                snap = ex.get_slice(ex.W, j)
         for o in self._out_intra[j]:
             eng.send(j, o, round=k)
         for o in self._out_inter[j]:
             eng.send(j, o, round=k, payload=snap)
 
     def _maybe_start(self, j: int, k: int) -> None:
-        if self._past_stop(k) or self.rounds[j] != k - 1 or (j, k) in self._started:
-            return
-        if not self._in_intra[j] <= self._arrived.get((j, k - 1), set()):
+        if self._past_stop(k) or self.rounds[j] != k - 1 or \
+                self._started_r[j] >= k or self._cnt[j] != 0:
             return
         eng = self.engine
         eng.schedule(eng.clock + eng.compute_duration(j, k), COMPUTE_DONE, j,
                      round=k)
-        self._started.add((j, k))
+        self._started_r[j] = k
 
     def _complete(self, j: int, k: int) -> dict:
         failed = self._maybe_fail_step(j, k)
@@ -874,17 +1319,18 @@ class HierGossip(_BarrierGossip):
         if ex is not None:
             from repro.core.topology import survivor_column
 
+            store = self._snaps
             # j's own row is untouched since round k started: w_j(k-1)
             w_start = ex.get_slice(ex.W, j)
             l, grad = ex.loss_and_grad(w_start, ex.batches.slice(k - 1, j))
             u, opt_j = ex.update_slice(grad, ex.get_slice(ex.opt, j),
                                        w_start, k - 1)
             keep = np.ones(eng.M, dtype=bool)
-            arrived = self._arrived.get((j, k - 1), set())
-            S = ex.W
-            for i in self._in_intra[j]:
-                if i in arrived and (i, k - 1) in self._snaps:
-                    S = ex.set_slice(S, i, self._snaps[(i, k - 1)])
+            fix = []   # rows the plane does not already hold for round k-1
+            for i in map(int, self._in_intra[j]):
+                if self._arrived_bit(j, i) and store.has(i, k - 1):
+                    if not store.in_plane(i, k - 1):
+                        fix.append((i, store.spill[(i, k - 1)]))
                 else:
                     keep[i] = False      # degraded: snapshot never arrived
             for i in self._in_inter[j]:
@@ -892,20 +1338,28 @@ class HierGossip(_BarrierGossip):
                 if got is None or not eng.alive[i]:
                     keep[i] = False      # dead pod: drop its stale estimate
                 else:
-                    S = ex.set_slice(S, i, got[1])
-            col = np.array(eng.topology.A[:, j])
+                    fix.append((i, got[1]))
+            col = self._A[:, j]
             if not keep.all():
-                col = survivor_column(col, j, keep, self.degrade_mode)
+                col = survivor_column(col.copy(), j, keep, self.degrade_mode)
+            if self.commit_mode == "slice":
+                S = store.source(k - 1, fix)
+            else:
+                # reference assembly: current W with every usable neighbor
+                # row patched in (the pre-refactor path)
+                S = ex.W
+                for i, v in fix:
+                    S = ex.set_slice(S, i, v)
+                for i in map(int, self._in_intra[j]):
+                    if keep[i] and store.in_plane(i, k - 1):
+                        S = ex.set_slice(S, i, store.row(i, k - 1))
             mixed = ex.mix_column(S, col)   # exact weights, stale DCI values
-            ex.W = ex.set_slice(ex.W, j, ex.apply(mixed, u))
-            ex.opt = ex.set_slice(ex.opt, j, opt_j)
+            ex.W = ex.set_slice_(ex.W, j, ex.apply(mixed, u))
+            ex.opt = ex.set_slice_(ex.opt, j, opt_j)
             for i in self._in_intra[j]:
-                self._release_snap(i, k - 1, j)
+                store.release(int(i), k - 1, j)
             loss = float(l)
-        self.rounds[j] = k
-        self._arrived.pop((j, k - 1), None)
-        self._started.discard((j, k))
-        self._degraded.discard((j, k))
+        self._advance(j, k)
         self._broadcast(j, k)
         self._maybe_start(j, k + 1)
         self._arm_timeout(j, k + 1)

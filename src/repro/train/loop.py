@@ -357,6 +357,9 @@ def run_simulated(
     trace_path: str | None = None,
     barrier_timeout: float | None = None,
     degrade_mode: str = "reabsorb",
+    commit: str = "slice",
+    commit_batch: bool = True,
+    snap_depth: int = 4,
     recovery: RecoveryPolicy | None = None,
     fault_inject: Callable[[int, int, int], bool] | None = None,
     health: "bool | object" = False,
@@ -397,6 +400,16 @@ def run_simulated(
         `barrier_timeout` virtual seconds commits over the snapshots that
         arrived, with the survivor-repaired weight column (`degrade_mode`
         'reabsorb' | 'renormalize'). Fault-free runs are unaffected.
+      commit / commit_batch / snap_depth: barrier-protocol commit
+        architecture. ``commit='slice'`` (default) runs the O(M) compiled
+        per-slice step per completion, mixing over the round-tagged
+        snapshot planes (``snap_depth`` deep); with ``commit_batch=True``
+        same-instant completions additionally ride ONE vmapped per-slice
+        step (disabled automatically when a recovery manager is attached).
+        ``commit='full'`` opts back into the O(M²) full M-row reference
+        program — bit-identical trajectories either way (asserted in CI;
+        exception: ``adafactor_like``'s factored second moment is not
+        worker-elementwise, use ``commit='full'`` for bit-exactness there).
       recovery / fault_inject: attach a :class:`RecoveryPolicy`.
         ``fault_inject(worker, round, attempt) -> bool`` marks a step
         attempt as failed (retried with backoff per the policy; restored
@@ -430,6 +443,13 @@ def run_simulated(
                 f"(sync/hier); protocol {protocol!r} has no barrier")
         proto_kw = dict(barrier_timeout=barrier_timeout,
                         degrade_mode=degrade_mode)
+    if protocol in ("sync", "hier"):
+        proto_kw.update(commit=commit, commit_batch=commit_batch,
+                        snap_depth=snap_depth)
+    elif commit != "slice":
+        raise ValueError(
+            "commit configures the barrier protocols (sync/hier); "
+            f"protocol {protocol!r} has no commit mode")
     if mesh is not None:
         from repro.launch.mesh import WorkerMesh
 

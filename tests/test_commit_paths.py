@@ -1,0 +1,259 @@
+"""Commit-path equivalence tests (ISSUE 8): the per-slice commit — now the
+default — must reproduce the full-M reference trajectory bit-for-bit, with
+and without batching, with and without barrier-timeout degradation, and the
+BatchCache retirement watermark must bound memory without perturbing it."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import topology as T
+from repro.core.decentralized import replicate_for_workers
+from repro.core.gossip import GossipSpec
+from repro.data import WorkerBatcher, pad_to_equal, random_split
+from repro.optim import momentum_sgd, sgd
+from repro.sim import BatchCache, Engine, SyncGossip, TrainExecutor, scenarios
+from repro.train.loop import run_simulated
+
+
+# ---------------------------------------------------------------------------
+# Plumbing (mirrors test_sim_engine helpers; kept local so this file stands
+# alone as the CI commit-equivalence lane)
+# ---------------------------------------------------------------------------
+
+
+def _linear_problem(n=8, S_=256, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(S_, n))
+    w_true = rng.normal(size=n)
+    y = X @ w_true + 0.1 * rng.normal(size=S_)
+
+    def loss(params, batch):
+        bx, by = batch
+        return jnp.mean((bx @ params["w"] - by) ** 2)
+
+    return X, y, {"w": jnp.zeros(n)}, loss
+
+
+def _batches(X, y, M, *, batch_size=16, seed=0):
+    parts = pad_to_equal(random_split(len(X), M, seed=seed))
+    batcher = WorkerBatcher((X, y), parts, batch_size=batch_size, seed=seed)
+    while True:
+        yield tuple(jnp.asarray(a) for a in batcher.next())
+
+
+def _sim(topo, *, protocol="sync", rounds=6, scenario=None, opt=None,
+         lr=0.05, seed=0, **kw):
+    X, y, params0, loss = _linear_problem(seed=seed)
+    bs = 16 if topo.M <= 16 else 4   # partitions shrink as M grows
+    return run_simulated(
+        loss, replicate_for_workers(params0, topo.M), opt or sgd(lr),
+        _batches(X, y, topo.M, seed=seed, batch_size=bs),
+        gossip=GossipSpec(topology=topo, backend="einsum"),
+        protocol=protocol, scenario=scenario, rounds=rounds, **kw)
+
+
+def _assert_trees_equal(a, b, what):
+    flat_a, _ = jax.tree.flatten(a)
+    flat_b, _ = jax.tree.flatten(b)
+    assert len(flat_a) == len(flat_b)
+    for xa, xb in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                      err_msg=what)
+
+
+def _assert_runs_bitmatch(r_a, r_b):
+    """Same trajectory bit-for-bit: params, opt state, per-event schedule
+    (which embeds every committed loss float), and round counters."""
+    assert r_a.trace.signature() == r_b.trace.signature()
+    _assert_trees_equal(r_a.params, r_b.params, "final params differ")
+    _assert_trees_equal(r_a.opt_state, r_b.opt_state, "opt state differs")
+    np.testing.assert_array_equal(r_a.rounds, r_b.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Per-slice (default) vs commit='full' reference — fault-free
+# ---------------------------------------------------------------------------
+
+_KRON8 = T.kronecker(T.undirected_ring(4), T.clique(2))
+_KRON32 = T.kronecker(T.undirected_ring(8), T.clique(4))
+
+
+@pytest.mark.parametrize("topo,opt,scen", [
+    (T.undirected_ring(8), None, None),
+    (T.undirected_ring(8), momentum_sgd(0.05, 0.9),
+     scenarios.heavy_tail("asciq", seed=3)),
+    (_KRON8, None, scenarios.heavy_tail("spark", seed=1)),
+    (T.undirected_ring(32), None, None),
+    (_KRON32, momentum_sgd(0.05, 0.9), None),
+], ids=["ring8", "ring8-mom-tail", "kron8-tail", "ring32", "kron32-mom"])
+def test_sync_slice_matches_full(topo, opt, scen):
+    """SyncGossip: the fused per-slice commit (batched under deterministic
+    times, single-slice under heavy-tail stagger) reproduces the full-M
+    make_train_step reference trajectory exactly."""
+    r_slice = _sim(topo, opt=opt, scenario=scen, commit="slice")
+    r_full = _sim(topo, opt=opt, scenario=scen, commit="full")
+    _assert_runs_bitmatch(r_slice, r_full)
+
+
+@pytest.mark.parametrize("topo,opt,scen", [
+    (T.hier(2, 4), momentum_sgd(0.05, 0.9),
+     scenarios.heavy_tail("asciq", seed=5)),
+    (T.hier(4, 8), None, None),
+], ids=["hier2x4-mom-tail", "hier4x8"])
+def test_hier_slice_matches_full(topo, opt, scen):
+    """HierGossip: plane-sourced slice commits == W-assembled full mode."""
+    r_slice = _sim(topo, protocol="hier", opt=opt, scenario=scen,
+                   commit="slice")
+    r_full = _sim(topo, protocol="hier", opt=opt, scenario=scen,
+                  commit="full")
+    _assert_runs_bitmatch(r_slice, r_full)
+
+
+# ---------------------------------------------------------------------------
+# Slice vs full under barrier-timeout degradation (churn)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol,topo", [
+    ("sync", T.undirected_ring(8)),
+    ("hier", T.hier(2, 4)),
+], ids=["sync", "hier"])
+def test_slice_matches_full_under_preemption_degradation(protocol, topo):
+    """With a preemption wave stalling barriers, degraded commits (survivor
+    column over arrived snapshots) run the same code in both modes and the
+    complete commits still bit-match, so whole traces stay identical."""
+    scen = scenarios.preemption_wave(
+        8, start=3.0, interval=0.7, count=2, down_for=5.0, seed=3)
+    kw = dict(protocol=protocol, rounds=12, scenario=scen,
+              barrier_timeout=2.0)
+    r_slice = _sim(topo, commit="slice", **kw)
+    r_full = _sim(topo, commit="full", **kw)
+    _assert_runs_bitmatch(r_slice, r_full)
+    kinds = {r.kind for r in r_slice.trace.records}
+    assert "fail" in kinds and "join" in kinds, \
+        "scenario failed to exercise churn degradation"
+
+
+def test_slice_matches_full_timeout_armed_but_quiet():
+    """barrier_timeout set but never firing (ideal times): both modes keep
+    the exact fault-free schedule."""
+    topo = T.undirected_ring(8)
+    r_slice = _sim(topo, commit="slice", barrier_timeout=50.0)
+    r_full = _sim(topo, commit="full", barrier_timeout=50.0)
+    r_plain = _sim(topo, commit="slice")
+    _assert_runs_bitmatch(r_slice, r_full)
+    assert r_slice.trace.signature() == r_plain.trace.signature()
+
+
+# ---------------------------------------------------------------------------
+# Batched vs unbatched per-slice commits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scen", [
+    None,
+    scenarios.heavy_tail("spark", seed=2),
+], ids=["lockstep", "tail"])
+def test_batched_commits_match_unbatched(scen):
+    """One vmapped commit over every same-instant barrier completion ==
+    per-worker commits in heap order (lockstep forms full-M batches; the
+    heavy tail mostly degenerates to singles — both must be invisible)."""
+    topo = T.ring_lattice(8, 4)
+    r_on = _sim(topo, scenario=scen, opt=momentum_sgd(0.05, 0.9),
+                commit_batch=True)
+    r_off = _sim(topo, scenario=scen, opt=momentum_sgd(0.05, 0.9),
+                 commit_batch=False)
+    _assert_runs_bitmatch(r_on, r_off)
+
+
+def test_batched_commits_match_unbatched_under_churn():
+    """Partial batches (preemption carves the lockstep fleet into uneven
+    same-instant groups) take the pow2-bucketed path; still bit-identical."""
+    scen = scenarios.preemption_wave(
+        8, start=3.0, interval=0.7, count=2, down_for=5.0, seed=3)
+    kw = dict(rounds=12, scenario=scen, barrier_timeout=2.0)
+    r_on = _sim(T.undirected_ring(8), commit_batch=True, **kw)
+    r_off = _sim(T.undirected_ring(8), commit_batch=False, **kw)
+    _assert_runs_bitmatch(r_on, r_off)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-off signature gate (PR 7) re-asserted on the new default path
+# ---------------------------------------------------------------------------
+
+
+def test_health_gauges_do_not_perturb_slice_path_signature():
+    scen = scenarios.heavy_tail("asciq", seed=5)
+    kw = dict(rounds=8, scenario=scen, barrier_timeout=9.0)
+    r_off = _sim(T.undirected_ring(8), **kw)
+    r_on = _sim(T.undirected_ring(8), health=True, **kw)
+    assert r_off.trace.signature() == r_on.trace.signature()
+    _assert_trees_equal(r_off.params, r_on.params, "health perturbed params")
+
+
+# ---------------------------------------------------------------------------
+# Knob validation
+# ---------------------------------------------------------------------------
+
+
+def test_commit_mode_rejected_for_non_barrier_protocols():
+    with pytest.raises(ValueError, match="commit"):
+        _sim(T.undirected_ring(8), protocol="async", commit="full")
+
+
+def test_bogus_commit_mode_rejected():
+    with pytest.raises(ValueError, match="commit"):
+        _sim(T.undirected_ring(8), commit="reference")
+
+
+# ---------------------------------------------------------------------------
+# BatchCache retirement watermark (satellite: unbounded-growth fix)
+# ---------------------------------------------------------------------------
+
+
+def _counting_batches():
+    k = 0
+    while True:
+        yield {"x": jnp.full((2,), float(k))}
+        k += 1
+
+
+def test_batch_cache_retired_steps_raise():
+    cache = BatchCache(_counting_batches())
+    for k in range(6):
+        assert float(cache.get(k)["x"][0]) == float(k)
+    assert len(cache) == 6 and cache.floor == 0
+    cache.retire_below(3)
+    assert cache.floor == 3
+    assert len(cache) == 3
+    with pytest.raises(RuntimeError, match="retired"):
+        cache.get(2)
+    # live steps unaffected; the sequence keeps replaying deterministically
+    assert float(cache.get(3)["x"][0]) == 3.0
+    assert float(cache.get(7)["x"][0]) == 7.0
+    # watermark is monotone: lowering is a silent no-op
+    cache.retire_below(1)
+    assert cache.floor == 3
+    with pytest.raises(RuntimeError):
+        cache.slice(0, 0)
+
+
+def test_watermark_advances_during_sync_run():
+    """A long sync run holds O(round spread) cached batches, not O(rounds):
+    the protocol retires everything below the minimum live round."""
+    topo = T.undirected_ring(8)
+    X, y, params0, loss = _linear_problem()
+    ex = TrainExecutor(loss, sgd(0.05), replicate_for_workers(params0, 8),
+                       _batches(X, y, 8), GossipSpec(topology=topo,
+                                                     backend="einsum"))
+    proto = SyncGossip(executor=ex)
+    eng = Engine(topo, scenarios.heavy_tail("asciq", seed=1))
+    eng.run(proto, until_round=20)
+    assert proto.rounds.min() >= 20
+    assert ex.batches.floor >= 18, \
+        f"watermark stuck at {ex.batches.floor} after 20 rounds"
+    assert len(ex.batches) <= 4, \
+        f"{len(ex.batches)} batches still cached — retirement not bounding"
+    with pytest.raises(RuntimeError, match="retired"):
+        ex.batches.get(0)
