@@ -1,0 +1,105 @@
+"""Convergence-vs-bytes on the compressed DCI lane (ISSUE 9 acceptance).
+
+Two hier runs on a bandwidth-constrained two-link-class world — exact fp32
+DCI vs int8-with-error-feedback DCI — plus a bf16 point. CI-asserted
+contracts:
+
+* the int8 run's per-message DCI bytes are EXACTLY the bus layout's
+  per-link-class prediction (``BusLayout.padded_bytes('int8')``) while its
+  ICI bytes stay at the exact payload — the sim charges the compressed
+  wire, not a hand-waved discount;
+* the DCI byte reduction is ≥ 3.5× on this fp32 parameter tree;
+* the int8 run reaches the common loss target in no more virtual time than
+  the exact run (with DCI bandwidth finite, smaller payloads ARE the win).
+
+Writes results/bench/dci_compress.json (provenance-stamped rows: bytes
+table + time/bytes-to-target per wire dtype).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import topology as T
+from repro.sim import scenarios, time_to_target
+
+DCI_LATENCY = 0.5
+ICI_LATENCY = 0.02
+
+
+def _payloads(problem):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.bus import plan_layout
+
+    params0 = jax.tree.map(jnp.asarray, problem[2])
+    layout = plan_layout(params0, lead_ndim=0)
+    return {None: layout.padded_bytes(),
+            "bfloat16": layout.padded_bytes("bfloat16"),
+            "int8": layout.padded_bytes("int8")}
+
+
+def run(quick: bool = False) -> list[dict]:
+    pods, pod_size = (2, 8) if quick else (4, 8)
+    topo = T.hier(pods, pod_size)
+    rounds = 40 if quick else 120
+    problem = common.problem_classifier(S=512 if quick else 2048)
+    payloads = _payloads(problem)
+    # DCI bandwidth sized so the EXACT payload costs ~6 latencies of wire
+    # time per hop: compression moves virtual time, not just a byte column
+    dci_bw = payloads[None] / (6.0 * DCI_LATENCY)
+
+    def scen():
+        return scenarios.datacenter("spark", dci_latency=DCI_LATENCY,
+                                    ici_latency=ICI_LATENCY, dci_bw=dci_bw,
+                                    seed=7)
+
+    runs, rows = {}, []
+    for wire in (None, "bfloat16", "int8"):
+        t0 = time.perf_counter()
+        r = common.run_sim(problem, topo, rounds=rounds, lr=0.3,
+                           protocol="hier", scenario=scen(), mesh="topology",
+                           eval_every=2, dci_dtype=wire)
+        wall = time.perf_counter() - t0
+        acct = r.trace.link_accounting()
+        # the sim must charge exactly the layout's per-class byte prediction
+        assert acct["dci"]["bytes"] == \
+            acct["dci"]["messages"] * payloads[wire], (wire, acct["dci"])
+        assert acct["ici"]["bytes"] == \
+            acct["ici"]["messages"] * payloads[None], (wire, acct["ici"])
+        runs[wire] = r
+        t, f = r.eval_curve()
+        rows.append({
+            "bench": "dci_compress", "topology": topo.name,
+            "wire_dtype": wire or "fp32-exact",
+            "dci_payload_bytes": payloads[wire],
+            "dci_bytes_total": acct["dci"]["bytes"],
+            "ici_bytes_total": acct["ici"]["bytes"],
+            "dci_byte_reduction": payloads[None] / payloads[wire],
+            "virtual_time": float(r.virtual_time),
+            "final_loss": float(np.asarray(f)[-1]),
+            "wall_s": wall, "events": len(r.trace),
+        })
+
+    # acceptance: >=3.5x DCI byte reduction on the int8 lane
+    assert payloads[None] / payloads["int8"] >= 3.5, payloads
+    # acceptance: the compressed run is never slower to the common target
+    target = max(r["final_loss"] for r in rows)
+    for row, wire in zip(rows, (None, "bfloat16", "int8")):
+        t, f = runs[wire].eval_curve()
+        row["loss_target"] = target
+        row["time_to_target"] = time_to_target(np.asarray(t),
+                                               np.asarray(f), target)
+        hops = runs[wire].trace.link_accounting()["dci"]
+        row["dci_bytes_per_vtime"] = hops["bytes"] / max(
+            float(runs[wire].virtual_time), 1e-9)
+    tt = {row["wire_dtype"]: row["time_to_target"] for row in rows}
+    assert tt["int8"] <= tt["fp32-exact"], tt
+    for row in rows:
+        row["int8_beats_exact_vtime"] = bool(tt["int8"] <= tt["fp32-exact"])
+
+    common.save_json("dci_compress", rows)
+    return rows

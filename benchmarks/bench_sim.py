@@ -67,14 +67,32 @@ def _link_class_lane(quick: bool, seed: int = 0) -> dict:
     acct = r.trace.link_accounting()
     payload = r.trace.meta["mesh"]["payload_bytes"]
     params0 = jax.tree.map(jnp.asarray, problem[2])
-    expect = plan_layout(params0, lead_ndim=0).padded_bytes()
+    layout = plan_layout(params0, lead_ndim=0)
+    expect = layout.padded_bytes()
     assert payload == expect, (
         "sim payload drifted from the bus layout prediction", payload, expect)
     for cls in ("ici", "dci"):
         assert acct[cls]["bytes"] == acct[cls]["messages"] * payload, \
             (cls, acct, payload)
     assert acct["dci"]["time"] >= 8.0 * acct["dci"]["messages"]
+
+    # compressed DCI lane: the engine must charge the layout's per-class
+    # int8 prediction on DCI edges (ICI stays exact) — >=3.5x reduction
+    int8_payload = layout.padded_bytes("int8")
+    rc = common.run_sim(problem, topo, rounds=10, lr=0.1, protocol="hier",
+                        scenario=scenarios.datacenter(
+                            "spark", dci_latency=8.0, ici_latency=0.02,
+                            seed=7),
+                        eval_every=0, mesh="topology", dci_dtype="int8")
+    cacct = rc.trace.link_accounting()
+    assert cacct["dci"]["bytes"] == cacct["dci"]["messages"] * int8_payload, \
+        (cacct["dci"], int8_payload)
+    assert cacct["ici"]["bytes"] == cacct["ici"]["messages"] * payload, \
+        (cacct["ici"], payload)
+    assert payload / int8_payload >= 3.5, (payload, int8_payload)
     return {"bench": "sim", "topology": topo.name, "mode": "train-hier-mesh",
+            "dci_int8_payload_bytes": int8_payload,
+            "dci_int8_reduction": payload / int8_payload,
             "events": len(r.trace), "wall_s": dt,
             "events_per_sec": len(r.trace) / dt,
             "virtual_time": float(r.virtual_time),

@@ -26,6 +26,7 @@ BENCHES = [
     ("bus", "benchmarks.bench_bus"),
     ("groups", "benchmarks.bench_groups"),
     ("sim", "benchmarks.bench_sim"),
+    ("dci_compress", "benchmarks.bench_dci_compress"),
     ("sim_scale", "benchmarks.bench_sim_scale"),
     ("faults", "benchmarks.bench_faults"),
     ("roofline", "benchmarks.bench_roofline"),

@@ -67,12 +67,15 @@ from repro.kernels.gossip_mix.kernel import (
     DEFAULT_BLOCK_R,
     gossip_mix_2d,
 )
+from repro.kernels.quant_pack.kernel import quantize_pack_2d
 
 PyTree = Any
 
 __all__ = ["BusLayout", "plan_layout", "pack", "unpack", "mix_bus",
-           "mix_and_update_time_varying", "bulk_collectives_per_step",
-           "sublane_rows", "sharded_leaf_flags", "LANE"]
+           "mix_bus_compressed", "mix_and_update_time_varying",
+           "bulk_collectives_per_step", "sublane_rows", "sharded_leaf_flags",
+           "quantize_wire", "dequantize_wire", "wire_dtype_for",
+           "WIRE_DTYPES", "LANE"]
 
 # Bus rows are exactly one lane tile wide: padding granularity is one
 # sublane tile (sublane(dtype) × 128 elements) per model shard instead of a
@@ -83,6 +86,69 @@ LANE = 128
 def sublane_rows(dtype) -> int:
     """Native sublane tile height for ``dtype``: 8 fp32, 16 bf16, 32 int8."""
     return max(8, 32 // max(jnp.dtype(dtype).itemsize, 1))
+
+
+# Wire dtypes the compressed (DCI) lane supports. bf16 is a plain cast;
+# int8 carries one fp32 scale per 128-lane bus row (absmax/127 rounding).
+WIRE_DTYPES = ("bfloat16", "int8")
+
+# int8 wire rows ship one fp32 scale each (the quantize-pack side buffer).
+_SCALE_BYTES_PER_ROW = 4
+
+
+def wire_dtype_for(dtype, wire_dtype) -> jnp.dtype | None:
+    """The dtype a ``dtype`` bus group ships at on a compressed lane.
+
+    ``None`` → the group stays exact: the lane is off (``wire_dtype=None``),
+    the group is not floating point (int/bool state never quantizes), or
+    compression would not shrink it (bf16 → bf16). Raises on wire dtypes
+    outside :data:`WIRE_DTYPES`.
+    """
+    if wire_dtype is None:
+        return None
+    wt = jnp.dtype(wire_dtype)
+    if str(wt) not in WIRE_DTYPES:
+        raise ValueError(
+            f"unsupported wire dtype {wire_dtype!r}; expected one of "
+            f"{WIRE_DTYPES}")
+    dt = jnp.dtype(dtype)
+    # jnp.issubdtype, not dt.kind: ml_dtypes (bfloat16) report kind 'V'
+    if not jnp.issubdtype(dt, jnp.floating) or dt.itemsize <= wt.itemsize:
+        return None
+    return wt
+
+
+def quantize_wire(x: jax.Array, wire_dtype) -> tuple[jax.Array, jax.Array | None]:
+    """Quantize one array for the lossy wire: ``(payload, scale-or-None)``.
+
+    bf16 wire is a cast (``scale=None``); int8 wire uses a per-row absmax
+    scale over the LAST axis (``scale = absmax/127``, fp32, shape
+    ``x.shape[:-1] + (1,)``) so ``|x − payload·scale| ≤ scale/2``
+    elementwise and all-zero rows round-trip exactly. This is the generic
+    (pytree-leaf) twin of the fused bus-buffer kernel
+    (`repro.kernels.quant_pack.quantize_pack_2d`).
+    """
+    wt = jnp.dtype(wire_dtype)
+    if str(wt) == "bfloat16":
+        return x.astype(jnp.bfloat16), None
+    xf = jnp.asarray(x, jnp.float32)
+    squeeze = xf.ndim == 0
+    if squeeze:
+        xf = xf[None]
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    q = jnp.round(xf / scale).astype(jnp.int8)
+    if squeeze:
+        return q[0], scale[0]
+    return q, scale
+
+
+def dequantize_wire(payload: jax.Array, scale: jax.Array | None,
+                    dtype) -> jax.Array:
+    """Inverse of :func:`quantize_wire` up to the quantization error."""
+    if scale is None:
+        return payload.astype(dtype)
+    return (payload.astype(jnp.float32) * scale).astype(dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,11 +202,26 @@ class BusLayout:
         """Per-shard payload elements."""
         return sum(g.n for g in self.groups)
 
-    def padded_bytes(self) -> int:
+    def padded_bytes(self, wire_dtype=None) -> int:
         """Per-shard buffer bytes — the exact per-device payload of one bulk
-        collective (what the HLO byte-efficiency tests predict against)."""
-        return sum(g.rows * g.cols * jnp.dtype(g.dtype).itemsize
-                   for g in self.groups)
+        collective (what the HLO byte-efficiency tests predict against).
+
+        ``wire_dtype`` prices the compressed lane (per-link-class variant):
+        floating groups wider than the wire dtype ship at the wire width —
+        int8 additionally carries one fp32 scale per buffer row — while
+        every other group stays at its exact bytes. ``None`` (default) is
+        the exact lane, unchanged.
+        """
+        total = 0
+        for g in self.groups:
+            wt = wire_dtype_for(g.dtype, wire_dtype)
+            if wt is None:
+                total += g.rows * g.cols * jnp.dtype(g.dtype).itemsize
+            else:
+                total += g.rows * g.cols * wt.itemsize
+                if wt == jnp.dtype(jnp.int8):
+                    total += g.rows * _SCALE_BYTES_PER_ROW
+        return total
 
 
 def _pick_block_r(rows: int, block_r: int, sub: int) -> int:
@@ -662,6 +743,186 @@ def mix_bus(params: PyTree, spec, mesh=None, *, updates: PyTree | None = None,
                                        donate=False, groups=layout.groups,
                                        block_c=block_c)
     return unpack(mixed, layout)
+
+
+# ---------------------------------------------------------------------------
+# Compressed (lossy) consensus lane — the DCI stage of hierarchical gossip
+# ---------------------------------------------------------------------------
+
+
+def _quantize_rows(xe: jax.Array, block_r: int, interpret: bool):
+    """Fused int8 quantize-pack of a (lead..., R, C) fp32 buffer.
+
+    Returns ``(values int8, scales fp32 (lead..., R, 1))`` — one scale per
+    128-lane bus row, computed by the Pallas quantize-pack kernel over the
+    row-flattened view (``block_r`` divides R, so it divides lead·R).
+    """
+    C = xe.shape[-1]
+    x2 = xe.reshape(-1, C)
+    q, s = quantize_pack_2d(x2, block_r=min(block_r, x2.shape[0]),
+                            interpret=interpret)
+    return q.reshape(xe.shape), s.reshape(xe.shape[:-1] + (1,))
+
+
+def _dequant_f32(v: jax.Array, s: jax.Array | None) -> jax.Array:
+    return v.astype(jnp.float32) if s is None else v.astype(jnp.float32) * s
+
+
+def _mix_buffers_local_compressed(bufs, res_bufs, weights, perms, groups,
+                                  wire_dtype, interpret):
+    """Single-process emulation of the compressed lane (row-gather permute).
+
+    Permuting the dequantized buffer is elementwise-identical to permuting
+    (values, scales) and dequantizing at the receiver — which is what the
+    sharded path does on the wire — so this emulation is numerically exact
+    against it, mirroring `_mix_buffers_local` vs `_mix_buffers_sharded`.
+    """
+    outs, new_res = [], []
+    for gi, (x, g) in enumerate(zip(bufs, groups)):
+        wt = wire_dtype_for(g.dtype, wire_dtype)
+        if wt is None:   # exact group: int/bool state never quantizes
+            acc = x.astype(jnp.float32) * weights[0]
+            for i, (_, perm) in enumerate(perms):
+                acc += x[np.asarray(perm)].astype(jnp.float32) * weights[i + 1]
+            outs.append(acc.astype(g.dtype))
+            new_res.append(None)
+            continue
+        r = res_bufs[gi]
+        xe = x.astype(jnp.float32) + r
+        if str(wt) == "bfloat16":
+            deq = xe.astype(jnp.bfloat16).astype(jnp.float32)
+        else:
+            v, s = _quantize_rows(xe, g.block_r, interpret)
+            deq = _dequant_f32(v, s)
+        acc = deq * weights[0]
+        for i, (_, perm) in enumerate(perms):
+            acc += deq[np.asarray(perm)] * weights[i + 1]
+        outs.append(acc.astype(g.dtype))
+        new_res.append(xe - deq)
+    return outs, new_res
+
+
+def _mix_buffers_sharded_compressed(bufs, res_bufs, spec, mesh, weights,
+                                    perms, groups, wire_dtype, interpret):
+    """Distributed compressed lane: ppermute the WIRE image, not the buffer.
+
+    Each non-identity Birkhoff permutation moves the int8 values plus the
+    narrow fp32 scales (or the bf16 cast) — per-device collective bytes are
+    exactly ``BusLayout.padded_bytes(wire_dtype)``, the per-class prediction
+    the HLO tests pin. Every worker mixes DEQUANTIZED values (its own
+    included), so the consensus mean is preserved over the dequantized
+    estimates and the quantization error stays in the local EF residual.
+    """
+    axes = spec.worker_axes if len(spec.worker_axes) > 1 else spec.worker_axes[0]
+    pairs = _perm_pairs(spec, perms)
+    n = len(bufs)
+    res_in = [r for r in res_bufs if r is not None]
+    in_specs = tuple(P(spec.worker_axes) for _ in range(n + len(res_in)))
+
+    def f(*args):
+        xs, rs = args[:n], iter(args[n:])
+        outs, news = [], []
+        for x, g in zip(xs, groups):
+            x2 = x[0]                      # per-shard worker dim is 1
+            wt = wire_dtype_for(g.dtype, wire_dtype)
+            if wt is None:
+                acc = x2.astype(jnp.float32) * weights[0]
+                for i, pr in enumerate(pairs):
+                    acc += jax.lax.ppermute(
+                        x2, axes, pr).astype(jnp.float32) * weights[i + 1]
+                outs.append(acc.astype(g.dtype)[None])
+                continue
+            xe = x2.astype(jnp.float32) + next(rs)[0]
+            if str(wt) == "bfloat16":
+                v, s = xe.astype(jnp.bfloat16), None
+            else:
+                v, s = quantize_pack_2d(xe, block_r=g.block_r,
+                                        interpret=interpret)
+            deq = _dequant_f32(v, s)
+            acc = deq * weights[0]
+            for i, pr in enumerate(pairs):
+                vn = jax.lax.ppermute(v, axes, pr)
+                sn = None if s is None else jax.lax.ppermute(s, axes, pr)
+                acc += _dequant_f32(vn, sn) * weights[i + 1]
+            outs.append(acc.astype(g.dtype)[None])
+            news.append((xe - deq)[None])
+        return tuple(outs) + tuple(news)
+
+    n_res = len(res_in)
+    out = compat.shard_map(
+        f, mesh=mesh, in_specs=in_specs,
+        out_specs=tuple(P(spec.worker_axes) for _ in range(n + n_res)),
+        axis_names=set(spec.worker_axes),
+    )(*(tuple(bufs) + tuple(res_in)))
+    mixed = list(out[:n])
+    news = iter(out[n:])
+    new_res = [None if r is None else next(news) for r in res_bufs]
+    return mixed, new_res
+
+
+def mix_bus_compressed(params: PyTree, spec, mesh=None, *, wire_dtype,
+                       residual: list | None = None,
+                       interpret: bool | None = None,
+                       block_r: int = DEFAULT_BLOCK_R) -> tuple[PyTree, list | None]:
+    """Lossy bulk consensus with error feedback — the compressed DCI lane.
+
+    Computes the same ``P_j ← Σ_i A[i,j]·P_i`` consensus as :func:`mix_bus`,
+    but every floating dtype group wider than ``wire_dtype`` rides the wire
+    quantized (bf16 cast, or int8 with one fp32 scale per 128-lane bus row
+    via the fused quantize-pack kernel). CHOCO-SGD-style error feedback:
+    the residual ``r ← (x + r) − dequant(quant(x + r))`` is carried across
+    calls, so the quantization error is re-injected instead of lost and the
+    consensus mean of the dequantized estimates is preserved (all workers —
+    self term included — mix dequantized values).
+
+    Returns ``(mixed_params, new_residual)``. ``residual`` is an opaque
+    per-dtype-group buffer list (``None`` on the first call → zeros);
+    thread it through successive calls. ``wire_dtype=None`` delegates to
+    the exact :func:`mix_bus` bit-identically and passes ``residual``
+    through untouched.
+    """
+    if wire_dtype is None:
+        return mix_bus(params, spec, mesh, interpret=interpret,
+                       block_r=block_r), residual
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    a0, others = _split_perms(spec)
+    weights = jnp.asarray([a0] + [w for w, _ in others], jnp.float32)
+    layout = plan_layout(params, lead_ndim=1, block_r=block_r)
+    wts = [wire_dtype_for(g.dtype, wire_dtype) for g in layout.groups]
+    tel = telemetry.get()
+    if tel.active:
+        wire_b = layout.padded_bytes(wire_dtype)
+        tel.counter("bus.mix_calls")
+        # int8 groups ship values + scales: two collectives per permutation
+        tel.counter("bus.collectives", len(others) * sum(
+            0 if wt is None else (2 if wt == jnp.dtype(jnp.int8) else 1)
+            for wt in wts) + len(others) * sum(1 for wt in wts if wt is None))
+        tel.gauge("bus.dci_padded_bytes", wire_b)
+        tel.gauge("bus.dci_bytes_ratio",
+                  layout.padded_bytes() / max(wire_b, 1))
+    if not others:   # degenerate (M == 1): nothing rides the wire
+        return params, residual
+
+    bufs = pack(params, layout)
+    res_bufs = residual
+    if res_bufs is None:
+        res_bufs = [None if wt is None else jnp.zeros(b.shape, jnp.float32)
+                    for b, wt in zip(bufs, wts)]
+    assert len(res_bufs) == len(bufs), "residual does not match the layout"
+
+    if mesh is None:
+        mesh = compat.get_current_mesh()
+    with tel.annotate("bus.compressed_mix"):
+        if mesh is not None:
+            mixed, new_res = _mix_buffers_sharded_compressed(
+                bufs, res_bufs, spec, mesh, weights, others, layout.groups,
+                wire_dtype, interpret)
+        else:
+            mixed, new_res = _mix_buffers_local_compressed(
+                bufs, res_bufs, weights, others, layout.groups,
+                wire_dtype, interpret)
+    return unpack(mixed, layout), new_res
 
 
 def mix_and_update_time_varying(params: PyTree, spec, updates: PyTree,

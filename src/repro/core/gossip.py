@@ -44,7 +44,8 @@ from repro import compat
 from repro.core.topology import Topology
 
 __all__ = ["GossipSpec", "mix_pytree", "mix_reference", "make_mixer",
-           "hierarchical_mix", "split_hierarchical",
+           "hierarchical_mix", "hierarchical_mix_compressed",
+           "split_hierarchical",
            "survivor_mix", "survivor_hierarchical_mix"]
 
 PyTree = Any
@@ -273,6 +274,30 @@ def hierarchical_mix(params: PyTree, intra: GossipSpec, inter: GossipSpec, mesh=
     ``repro.sim.protocols``.
     """
     return mix_pytree(mix_pytree(params, intra, mesh), inter, mesh)
+
+
+def hierarchical_mix_compressed(params: PyTree, intra: GossipSpec,
+                                inter: GossipSpec, mesh=None, *,
+                                dci_dtype: str | None = None,
+                                residual: list | None = None
+                                ) -> tuple[PyTree, list | None]:
+    """Two-level gossip with a lossy cross-pod (DCI) stage.
+
+    The intra-pod stage keeps the exact fused path (fast ICI links don't
+    need compression); the inter-pod stage — whose every edge is a slow DCI
+    link — rides the compressed bus: bf16/int8 quantize on pack, dequantize
+    plus error-feedback residual accumulation on mix
+    (:func:`repro.core.bus.mix_bus_compressed`). Returns
+    ``(mixed_params, residual)``; thread ``residual`` across rounds.
+    ``dci_dtype=None`` is bit-identical to :func:`hierarchical_mix`.
+    """
+    if dci_dtype is None:
+        return hierarchical_mix(params, intra, inter, mesh), residual
+    from repro.core import bus  # local import: bus pulls in Pallas
+
+    mixed = mix_pytree(params, intra, mesh)
+    return bus.mix_bus_compressed(mixed, inter, mesh, wire_dtype=dci_dtype,
+                                  residual=residual)
 
 
 # ---------------------------------------------------------------------------

@@ -108,7 +108,7 @@ class WorkerMesh:
 
     # -- simulator mirror ---------------------------------------------------
     def sim_payload_bytes(self, params_template, param_specs=None, *,
-                          lead_ndim: int = 0) -> int:
+                          lead_ndim: int = 0, wire_dtype=None) -> int:
         """Per-device bytes of ONE bulk gossip collective on this mesh.
 
         Exactly ``BusLayout.padded_bytes`` of the layout-v2 plan for the
@@ -119,6 +119,10 @@ class WorkerMesh:
         wire bytes layout v2 ships. ``params_template`` is a per-worker
         pytree (abstract ``ShapeDtypeStruct`` leaves work); ``lead_ndim``
         leading dims (a stacked worker dim) are ignored.
+
+        ``wire_dtype`` ('bfloat16'|'int8') prices the compressed DCI lane
+        instead: the same plan's ``padded_bytes(wire_dtype)`` — quantized
+        group bytes plus the int8 per-row fp32 scales.
         """
         from repro.core.bus import plan_layout, sharded_leaf_flags
 
@@ -142,24 +146,31 @@ class WorkerMesh:
             local.append(jax.ShapeDtypeStruct((n // k if f else n,), x.dtype))
         layout = plan_layout(treedef.unflatten(local), lead_ndim=0, shards=k,
                              leaf_sharded=flags)
-        return layout.padded_bytes()
+        return layout.padded_bytes(wire_dtype)
 
-    def sim_spec(self, *, params_template=None, param_specs=None):
+    def sim_spec(self, *, params_template=None, param_specs=None,
+                 dci_dtype=None):
         """Mirror into a :class:`repro.sim.scenarios.MeshSpec`: worker group
         = coordinate along the leading worker axis (the 'pod' axis on
         multi-pod meshes — single-axis meshes are one group), payload bytes
-        from :meth:`sim_payload_bytes` when a template is given."""
+        from :meth:`sim_payload_bytes` when a template is given.
+        ``dci_dtype`` additionally prices cross-pod messages at the
+        compressed wire bytes (``dci_payload_bytes``)."""
         from repro.sim.scenarios import MeshSpec
 
         sizes = [int(self.mesh.shape[a]) for a in self.worker_axes]
         n = int(np.prod(sizes))
         # one pod when there is no pod axis; else group by the leading axis
         inner = n if len(sizes) == 1 else n // sizes[0]
-        payload = 0
+        payload = dci_payload = 0
         if params_template is not None:
             payload = self.sim_payload_bytes(params_template, param_specs)
+            if dci_dtype is not None:
+                dci_payload = self.sim_payload_bytes(
+                    params_template, param_specs, wire_dtype=dci_dtype)
         return MeshSpec(group_of=tuple(i // inner for i in range(n)),
-                        payload_bytes=payload, name=self.describe())
+                        payload_bytes=payload,
+                        dci_payload_bytes=dci_payload, name=self.describe())
 
     # -- mesh passthrough ---------------------------------------------------
     @property

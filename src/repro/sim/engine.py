@@ -175,7 +175,7 @@ class Engine:
         return self.schedule(
             t, ARRIVAL, dst, src=src, round=round,
             payload=payload, link_class=cls,
-            nbytes=self.mesh.payload_bytes if self.mesh is not None else 0,
+            nbytes=self.mesh.payload_for(cls) if self.mesh is not None else 0,
             wire_time=t - self.clock, retried=retried)
 
     def _preload_environment_events(self) -> None:
@@ -222,8 +222,11 @@ class Engine:
     def link_delay(self, src: int, dst: int) -> float:
         classes = self.scenario.link_classes
         if classes is not None:
-            cost = classes[self.link_class(src, dst)]
-            d = float(cost.delay(self.rngs[src], self.mesh.payload_bytes))
+            cls = self.link_class(src, dst)
+            # per-class payload: DCI edges charge the compressed wire bytes
+            # when the mesh prices a compressed lane (dci_payload_bytes)
+            d = float(classes[cls].delay(self.rngs[src],
+                                         self.mesh.payload_for(cls)))
         else:
             d = float(self.scenario.link_delay(self.rngs[src], src, dst))
         if d < 0.0:

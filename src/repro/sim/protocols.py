@@ -109,9 +109,14 @@ class BatchCache:
     def get(self, k: int) -> PyTree:
         if k < self._floor:
             raise RuntimeError(
-                f"batch {k} was retired (watermark {self._floor}): steps "
-                "below the minimum outstanding round across live workers "
-                "are dropped to bound memory — see BatchCache.retire_below")
+                f"batch {k} was retired (retirement watermark is "
+                f"{self._floor}, so only steps >= {self._floor} are still "
+                "cached): steps below the minimum outstanding round across "
+                "live workers are dropped to bound memory. A protocol "
+                "asking for a retired step is a round-bookkeeping bug — if "
+                "you drive BatchCache directly, call retire_below only with "
+                "floors no larger than the minimum round you will still "
+                "request.")
         while self._next <= k:
             self._cache[self._next] = next(self._it)
             self._next += 1
@@ -131,11 +136,42 @@ class BatchCache:
         self._floor = floor
 
 
+def _coupled_opt_state(optimizer, params0: PyTree) -> bool:
+    """Whether ``optimizer.init`` on the stacked (M, ...) params is NOT M
+    independent copies of the per-slice state.
+
+    Per-slice commits (``commit='slice'``) assume the stacked optimizer
+    state is worker-elementwise — row j of ``init(W)`` equals ``init(W[j])``
+    — so that slicing/updating one row reproduces the full program.
+    Optimizers like ``adafactor_like`` break this: a per-worker 1-D leaf is
+    2-D once stacked, so its second moment is row/col-factored *across the
+    worker axis*. Detected abstractly (``jax.eval_shape``): the stacked init
+    must have the per-slice init's tree structure with every leaf gaining
+    exactly the leading (M,) dim."""
+    import jax
+
+    M = jax.tree.leaves(params0)[0].shape[0]
+    try:
+        stacked = jax.eval_shape(optimizer.init, params0)
+        slice0 = jax.eval_shape(
+            optimizer.init,
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                         params0))
+    except Exception:
+        return False     # exotic init signature: keep the pre-check lenient
+
+    def sig(tree, lead):
+        ls, tdef = jax.tree.flatten(tree)
+        return tdef, [(lead + tuple(l.shape), str(l.dtype)) for l in ls]
+
+    return sig(stacked, ()) != sig(slice0, (M,))
+
+
 class TrainExecutor:
     """Stacked train state + the jitted per-slice / batched value ops."""
 
     def __init__(self, loss_fn: Callable, optimizer, params0: PyTree,
-                 batches, gossip):
+                 batches, gossip, *, commit: str = "slice"):
         import jax
         import jax.numpy as jnp
 
@@ -148,8 +184,26 @@ class TrainExecutor:
             raise ValueError(
                 "params0 must be stacked with leading worker dim M "
                 "(use repro.core.decentralized.replicate_for_workers)")
+        # coupled = the optimizer's state on the stacked (M, ...) params is
+        # NOT M independent per-slice states (e.g. adafactor_like row/col-
+        # factors a stacked 1-D leaf across workers)
+        self.coupled = _coupled_opt_state(optimizer, params0)
+        if commit != "full" and self.coupled:
+            raise ValueError(
+                f"optimizer {getattr(optimizer, 'name', optimizer)!r} couples "
+                "its state across the stacked worker axis (its init on the "
+                "stacked (M, ...) params is not M independent copies of the "
+                "per-slice state — e.g. adafactor_like row/col-factors a "
+                "stacked 1-D leaf across workers), so per-slice commits "
+                "would silently compute wrong second moments. Use "
+                "commit='full' (the full M-row reference program) with this "
+                "optimizer, or switch to a worker-elementwise optimizer.")
         self.W: PyTree = jax.tree.map(jnp.asarray, params0)
         self.opt: PyTree = optimizer.init(self.W)
+        # coupled reference mode (commit='full'): optimizer state is worker-
+        # LOCAL in a real decentralized run, so each worker carries its own
+        # full-stack state; rows of a shared `opt` would be meaningless.
+        self._opt_full: dict[int, PyTree] = {}
         self.batches = batches if isinstance(batches, BatchCache) else BatchCache(batches)
 
         self._loss1 = jax.jit(loss_fn)
@@ -388,7 +442,21 @@ class SnapPlanes:
     def row(self, i: int, r: int) -> PyTree:
         if self.in_plane(i, r):
             return self.ex.get_slice(self.planes[r % self.depth], i)
-        return self.spill[(i, r)]
+        try:
+            return self.spill[(i, r)]
+        except KeyError:
+            raise RuntimeError(self.overrun_message(i, r)) from None
+
+    def overrun_message(self, i: int, r: int) -> str:
+        """Actionable snap-ring overrun diagnostic for a missing row."""
+        held = int(self.tag[i, r % self.depth])
+        return (
+            f"snapshot ring overrun: worker {i}'s round-{r} estimate is "
+            f"gone — its plane slot now holds round {held} and the row was "
+            f"not spilled (snap_depth={self.depth}). The topology spread "
+            f"rounds more than snap_depth-1 apart before every consumer "
+            f"mixed the snapshot; raise snap_depth (run_simulated(..., "
+            f"snap_depth={self.depth * 2})) to widen the ring.")
 
     def source(self, r: int, fix_rows=()) -> PyTree:
         """The M-row mix source for round r: the plane itself on the fast
@@ -974,10 +1042,20 @@ class SyncGossip(_BarrierGossip):
 
         ex, store = self.executor, self._snaps
         S = self._assemble_from_W(j, k, fix_missing=False)
-        state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
-        new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
-        ex.W = ex.set_slice_(ex.W, j, ex.get_slice(new_state.params, j))
-        ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
+        if ex.coupled:
+            # worker j owns a FULL optimizer state of its own: committing
+            # "row j" of cross-worker-factored state (adafactor row/col
+            # moments) would splice together different workers' statistics.
+            opt_prev = ex._opt_full.get(j, ex.opt)
+            state = TrainState(jnp.asarray(k - 1, jnp.int32), S, opt_prev)
+            new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
+            ex._opt_full[j] = new_state.opt_state
+            ex.W = ex.set_slice_(ex.W, j, ex.get_slice(new_state.params, j))
+        else:
+            state = TrainState(jnp.asarray(k - 1, jnp.int32), S, ex.opt)
+            new_state, _ = ex.step_fn()(state, ex.batches.get(k - 1))
+            ex.W = ex.set_slice_(ex.W, j, ex.get_slice(new_state.params, j))
+            ex.opt = ex._commit(ex.opt, new_state.opt_state, j)
         loss = ex.local_loss(ex.get_slice(S, j), ex.batches.slice(k - 1, j))
         for i in self._in_arr[j]:
             store.release(int(i), k - 1, j)
@@ -1217,9 +1295,34 @@ class HierGossip(_BarrierGossip):
     ``barrier_timeout`` (see :class:`_BarrierGossip`) makes the *intra-pod*
     barrier churn-capable; a timed-out or neighbor-dead round mixes with
     the survivor-repaired column (dead cross-pod in-neighbors' stale
-    buffers are dropped and their weight reabsorbed too)."""
+    buffers are dropped and their weight reabsorbed too).
+
+    ``dci_dtype`` ('bfloat16' | 'int8') turns on the compressed DCI lane:
+    cross-pod snapshots are quantized through the bus wire format
+    (``repro.core.bus.quantize_wire``) with CHOCO-style error feedback — a
+    per-sender fp32 residual accumulates what quantization dropped and is
+    added back before the next quantize, so the consensus mean is preserved
+    in expectation. The *sent* payload is the dequantized image (exactly
+    what a receiver reconstructs from the wire), so trace values match the
+    compressed wire bit for bit while intra-pod mixing stays exact. With
+    ``dci_dtype=None`` every new branch is skipped — traces and
+    trajectories are bit-identical to the pre-compression protocol."""
 
     name = "hier"
+
+    def __init__(self, executor: TrainExecutor | None = None, *,
+                 dci_dtype: str | None = None, **kw):
+        super().__init__(executor, **kw)
+        if dci_dtype is not None:
+            import numpy as _np
+
+            from repro.core import bus
+
+            # eagerly validate the wire name (raises on unknown dtypes)
+            bus.wire_dtype_for(_np.dtype(_np.float32), dci_dtype)
+        self.dci_dtype = dci_dtype
+        # per-sender error-feedback residual trees (fp32, snapshot-shaped)
+        self._ef: dict[int, PyTree] = {}
 
     def bind(self, engine, stop_round=None):
         super().bind(engine, stop_round)
@@ -1256,6 +1359,11 @@ class HierGossip(_BarrierGossip):
             for j in range(eng.M):
                 for i in self._in_inter[j]:
                     self._stale[(j, i)] = (0, ex.get_slice(ex.W, i))
+        if self.dci_dtype is not None and eng.mesh is not None and \
+                eng.mesh.payload_bytes and eng.mesh.dci_payload_bytes:
+            eng.trace.record_gauge(
+                0.0, "hier.dci_bytes_ratio",
+                eng.mesh.payload_bytes / eng.mesh.dci_payload_bytes)
         for j in range(eng.M):
             self._broadcast(j, 0)
         for j in range(eng.M):
@@ -1296,10 +1404,48 @@ class HierGossip(_BarrierGossip):
             self._snaps.publish(j, k, self._out_intra[j])
             if self._out_inter[j]:
                 snap = ex.get_slice(ex.W, j)
+                if self.dci_dtype is not None:
+                    snap = self._compress_snap(j, snap)
         for o in self._out_intra[j]:
             eng.send(j, o, round=k)
         for o in self._out_inter[j]:
             eng.send(j, o, round=k, payload=snap)
+
+    def _compress_snap(self, j: int, snap: PyTree) -> PyTree:
+        """Quantize worker j's cross-pod snapshot through the bus wire
+        format with error feedback: xe = x + residual is quantized, the
+        *dequantized* image is what every receiver mixes, and the new
+        residual xe − deq carries the dropped mass into the next round.
+        Non-compressible leaves (ints, already-narrow floats) pass through
+        exactly with a zero residual."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import bus
+
+        leaves, tdef = jax.tree_util.tree_flatten(snap)
+        res = self._ef.get(j)
+        rs = [jnp.zeros(x.shape, jnp.float32) for x in leaves] \
+            if res is None else tdef.flatten_up_to(res)
+        outs, news, sq = [], [], 0.0
+        for x, r in zip(leaves, rs):
+            wt = bus.wire_dtype_for(x.dtype, self.dci_dtype)
+            if wt is None:
+                outs.append(x)
+                news.append(r)
+                continue
+            xe = x.astype(jnp.float32) + r
+            payload, scale = bus.quantize_wire(xe, self.dci_dtype)
+            deq = bus.dequantize_wire(payload, scale, x.dtype)
+            new_r = xe - deq.astype(jnp.float32)
+            outs.append(deq)
+            news.append(new_r)
+            sq += float(jnp.sum(new_r * new_r))
+        self._ef[j] = tdef.unflatten(news)
+        eng = self.engine
+        eng.trace.record_gauge(eng.clock, "hier.dci_ef_residual_norm",
+                               float(np.sqrt(sq)))
+        return tdef.unflatten(outs)
 
     def _maybe_start(self, j: int, k: int) -> None:
         if self._past_stop(k) or self.rounds[j] != k - 1 or \

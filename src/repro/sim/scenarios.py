@@ -217,10 +217,17 @@ class MeshSpec:
     ships (``payload_bytes`` — `BusLayout.padded_bytes` of the layout-v2
     plan, see :meth:`~repro.launch.mesh.WorkerMesh.sim_payload_bytes`), so
     virtual time charges the real wire payloads.
+
+    ``dci_payload_bytes`` prices the compressed cross-pod lane: when > 0,
+    DCI-class messages are charged that many bytes instead of
+    ``payload_bytes`` (``BusLayout.padded_bytes(wire_dtype)`` — the int8/bf16
+    wire image of the same buffer). 0 keeps both classes at the exact
+    payload, unchanged.
     """
 
     group_of: tuple[int, ...]
     payload_bytes: int = 0
+    dci_payload_bytes: int = 0
     name: str = "mesh"
 
     def __post_init__(self):
@@ -235,21 +242,32 @@ class MeshSpec:
     def n_groups(self) -> int:
         return len(set(self.group_of))
 
+    def payload_for(self, link_class: str) -> int:
+        """Per-message bytes charged on ``link_class`` edges: the compressed
+        DCI payload when one is set, the exact bus payload otherwise."""
+        if link_class == DCI and self.dci_payload_bytes:
+            return self.dci_payload_bytes
+        return self.payload_bytes
+
     @classmethod
-    def pods(cls, M: int, n_pods: int, *, payload_bytes: int = 0) -> "MeshSpec":
+    def pods(cls, M: int, n_pods: int, *, payload_bytes: int = 0,
+             dci_payload_bytes: int = 0) -> "MeshSpec":
         """M workers in n_pods equal contiguous pods (the multi-pod layout)."""
         if M % n_pods:
             raise ValueError(f"{M} workers do not split into {n_pods} pods")
         group = np.repeat(np.arange(n_pods), M // n_pods)
         return cls(group_of=tuple(group), payload_bytes=payload_bytes,
+                   dci_payload_bytes=dci_payload_bytes,
                    name=f"pods-{n_pods}x{M // n_pods}")
 
     @classmethod
-    def from_topology(cls, topo: Topology, *, payload_bytes: int = 0) -> "MeshSpec":
+    def from_topology(cls, topo: Topology, *, payload_bytes: int = 0,
+                      dci_payload_bytes: int = 0) -> "MeshSpec":
         """Adopt a hierarchical topology's own pod assignment (kronecker)."""
         if topo.group_of is None:
             raise ValueError(f"{topo.name} carries no group metadata")
         return cls(group_of=topo.group_of, payload_bytes=payload_bytes,
+                   dci_payload_bytes=dci_payload_bytes,
                    name=f"mesh({topo.name})")
 
     @classmethod
@@ -271,8 +289,11 @@ class MeshSpec:
         raise TypeError(f"cannot build a MeshSpec from {type(mesh).__name__}")
 
     def describe(self) -> dict:
-        return {"name": self.name, "workers": self.M,
-                "groups": self.n_groups, "payload_bytes": self.payload_bytes}
+        out = {"name": self.name, "workers": self.M,
+               "groups": self.n_groups, "payload_bytes": self.payload_bytes}
+        if self.dci_payload_bytes:
+            out["dci_payload_bytes"] = self.dci_payload_bytes
+        return out
 
 
 ICI = "ici"

@@ -152,10 +152,17 @@ class Trace:
         runs): message count, total payload bytes shipped, total wire time
         the scenario's :class:`~repro.sim.scenarios.LinkCost` charged, plus
         the fault-tolerance view — retried messages/bytes (deliveries held
-        by a dead link until it recovered) and ``downtime`` (summed
-        LINK_DOWN→LINK_UP window lengths of that class, open windows closed
-        at the last trace time). Meshless runs (no class annotations) return
-        an empty dict."""
+        by a dead link until it recovered) and ``downtime`` (the *union* of
+        that class's LINK_DOWN→LINK_UP windows per fault scope, open windows
+        closed at the last trace time). Meshless runs (no class annotations)
+        return an empty dict.
+
+        Overlapping or adjacent fault windows on the same link — e.g. a
+        pod-scoped dead window and a degraded window covering the same pod
+        and class — are interval-unioned with a per-(class, scope) open-
+        window depth counter, so the overlap is counted once. (The old FIFO
+        start/stop pairing summed raw window lengths and double-counted
+        every overlap.)"""
         out: dict[str, dict[str, float]] = {}
 
         def acc(cls: str) -> dict[str, float]:
@@ -164,15 +171,22 @@ class Trace:
                 "retried_messages": 0, "retried_bytes": 0.0,
                 "downtime": 0.0})
 
-        open_down: dict[tuple[str, int], list[float]] = {}
+        depth: dict[tuple[str, int], int] = {}
+        since: dict[tuple[str, int], float] = {}
         t_last = self.records[-1].t if self.records else 0.0
         for r in self.records:
             if r.kind == LINK_DOWN and r.link_class is not None:
-                open_down.setdefault((r.link_class, r.src), []).append(r.t)
+                key = (r.link_class, r.src)
+                if depth.get(key, 0) == 0:
+                    since[key] = r.t
+                depth[key] = depth.get(key, 0) + 1
             elif r.kind == LINK_UP and r.link_class is not None:
-                starts = open_down.get((r.link_class, r.src))
-                if starts:
-                    acc(r.link_class)["downtime"] += r.t - starts.pop(0)
+                key = (r.link_class, r.src)
+                d = depth.get(key, 0)
+                if d == 1:
+                    acc(r.link_class)["downtime"] += r.t - since.pop(key)
+                if d > 0:
+                    depth[key] = d - 1
             elif r.kind == ARRIVAL and r.link_class is not None:
                 a = acc(r.link_class)
                 a["messages"] += 1
@@ -181,9 +195,8 @@ class Trace:
                 if r.retried:
                     a["retried_messages"] += 1
                     a["retried_bytes"] += r.nbytes
-        for (cls, _), starts in open_down.items():
-            for t0 in starts:
-                acc(cls)["downtime"] += t_last - t0
+        for (cls, _), t0 in since.items():
+            acc(cls)["downtime"] += t_last - t0
         return out
 
     # -- persistence / identity ------------------------------------------

@@ -309,27 +309,46 @@ def export_consensus(src: str | PyTree, dst: str | None = None,
                      step: int | None = None) -> PyTree:
     """Collapse a gossip checkpoint (leading worker dim) to a serving one.
 
-    ``src`` is a checkpoint path (leaves loaded as stored) or an in-memory
+    ``src`` is a checkpoint path (leaves loaded as stored — monolithic or
+    worker-sharded ``save_sharded`` layouts both work) or an in-memory
     worker-stacked pytree. The averaged single-replica tree is returned and,
     when ``dst`` is given, saved as a normal checkpoint that
     ``serving.engine.load_consensus_params`` (or plain :func:`restore`)
     can feed straight into prefill/decode."""
     if isinstance(src, str):
         path = src if src.endswith(".npz") else src + ".npz"
-        data = np.load(path)
-        leaves = {}
-        for stored in data.files:
-            raw = data[stored]
-            if stored.endswith(_BF16_TAG):
-                raw = raw.view(jnp.bfloat16.dtype)
-            leaves[_base_key(stored)] = raw
-        tree = _unflatten_keys(leaves)
-        if step is None:
-            # save() keys the .meta.json on the caller's spelling, which may
-            # or may not include the .npz suffix — probe both.
-            step = latest_step(path)
-            if step is None and path != src:
-                step = latest_step(src)
+        meta = None if os.path.exists(path) else _sharded_meta(path)
+        if meta is not None:
+            # worker-sharded checkpoint: stack the per-shard bit patterns in
+            # shard order (the restore_sharded inverse), tags preserved so
+            # bf16 leaves view back losslessly before the fp32 averaging
+            base = _strip_npz(path)
+            shards = [np.load(f"{base}.shard-{c}.npz")
+                      for c in meta["sharded"]["shards"]]
+            leaves = {}
+            for stored in shards[0].files:
+                raw = np.stack([s[stored] for s in shards])
+                if stored.endswith(_BF16_TAG):
+                    raw = raw.view(jnp.bfloat16.dtype)
+                leaves[_base_key(stored)] = raw
+            tree = _unflatten_keys(leaves)
+            if step is None:
+                step = meta.get("step")
+        else:
+            data = np.load(path)
+            leaves = {}
+            for stored in data.files:
+                raw = data[stored]
+                if stored.endswith(_BF16_TAG):
+                    raw = raw.view(jnp.bfloat16.dtype)
+                leaves[_base_key(stored)] = raw
+            tree = _unflatten_keys(leaves)
+            if step is None:
+                # save() keys the .meta.json on the caller's spelling, which
+                # may or may not include the .npz suffix — probe both.
+                step = latest_step(path)
+                if step is None and path != src:
+                    step = latest_step(src)
     else:
         tree = src
     mean = consensus_params(tree)

@@ -331,12 +331,14 @@ class SimRun:
         return self.trace.eval_curve()
 
 
-def _meshless_payload_bytes(params_template: PyTree) -> int:
+def _meshless_payload_bytes(params_template: PyTree,
+                            wire_dtype: str | None = None) -> int:
     """Per-message bytes of one whole-replica gossip payload: the bus
-    layout-v2 plan's padded buffer for an unsharded (k = 1) replica."""
+    layout-v2 plan's padded buffer for an unsharded (k = 1) replica
+    (``wire_dtype`` prices the compressed DCI lane of the same plan)."""
     from repro.core.bus import plan_layout
 
-    return plan_layout(params_template, lead_ndim=0).padded_bytes()
+    return plan_layout(params_template, lead_ndim=0).padded_bytes(wire_dtype)
 
 
 def run_simulated(
@@ -360,6 +362,7 @@ def run_simulated(
     commit: str = "slice",
     commit_batch: bool = True,
     snap_depth: int = 4,
+    dci_dtype: str | None = None,
     recovery: RecoveryPolicy | None = None,
     fault_inject: Callable[[int, int, int], bool] | None = None,
     health: "bool | object" = False,
@@ -409,7 +412,17 @@ def run_simulated(
         ``commit='full'`` opts back into the O(M²) full M-row reference
         program — bit-identical trajectories either way (asserted in CI;
         exception: ``adafactor_like``'s factored second moment is not
-        worker-elementwise, use ``commit='full'`` for bit-exactness there).
+        worker-elementwise, use ``commit='full'`` for bit-exactness there —
+        per-slice runs with such a coupled optimizer are rejected at
+        construction).
+      dci_dtype: 'bfloat16' | 'int8' | None — compress the cross-pod (DCI)
+        stage of the ``hier`` protocol: outgoing cross-pod snapshots are
+        quantized through the bus wire format with error feedback
+        (``repro.sim.protocols.HierGossip``), and with a mesh attached the
+        engine charges DCI messages the compressed wire bytes
+        (``BusLayout.padded_bytes(dci_dtype)``) instead of the exact
+        payload. Intra-pod traffic stays exact; ``None`` (default) is
+        bit-identical to the uncompressed protocol.
       recovery / fault_inject: attach a :class:`RecoveryPolicy`.
         ``fault_inject(worker, round, attempt) -> bool`` marks a step
         attempt as failed (retried with backoff per the policy; restored
@@ -450,6 +463,12 @@ def run_simulated(
         raise ValueError(
             "commit configures the barrier protocols (sync/hier); "
             f"protocol {protocol!r} has no commit mode")
+    if dci_dtype is not None:
+        if protocol != "hier":
+            raise ValueError(
+                "dci_dtype compresses the cross-pod (DCI) stage of the "
+                f"hier protocol; protocol {protocol!r} has no DCI stage")
+        proto_kw.update(dci_dtype=dci_dtype)
     if mesh is not None:
         from repro.launch.mesh import WorkerMesh
 
@@ -458,13 +477,29 @@ def run_simulated(
         if mesh == "topology":
             mesh = sim.MeshSpec.from_topology(gossip.topology)
         elif isinstance(mesh, WorkerMesh):
-            mesh = mesh.sim_spec(params_template=template)
+            mesh = mesh.sim_spec(params_template=template,
+                                 dci_dtype=dci_dtype)
         if isinstance(mesh, sim.MeshSpec) and not mesh.payload_bytes:
             # fill in the per-message wire bytes from the bus layout plan so
             # bandwidth terms and the per-class byte accounting are real
             mesh = dataclasses.replace(
                 mesh, payload_bytes=_meshless_payload_bytes(template))
-    executor = sim.TrainExecutor(loss_fn, optimizer, params0, batches, gossip)
+        if dci_dtype is not None and isinstance(mesh, sim.MeshSpec) and \
+                not mesh.dci_payload_bytes:
+            # cross-pod messages ship the quantized image: charge the
+            # compressed wire bytes (same plan, wire pricing) on DCI links
+            mesh = dataclasses.replace(
+                mesh, dci_payload_bytes=_meshless_payload_bytes(
+                    template, dci_dtype))
+    executor = sim.TrainExecutor(loss_fn, optimizer, params0, batches,
+                                 gossip, commit=commit)
+    if executor.coupled and protocol == "hier":
+        raise ValueError(
+            "the hier protocol commits per worker slice in both commit "
+            "modes (its commit='full' only changes the mix-source "
+            "assembly), so optimizers with cross-worker-coupled state "
+            "cannot run on it. Use protocol='sync' with commit='full', or "
+            "a worker-elementwise optimizer.")
     proto = proto_cls(executor=executor, eval_fn=eval_fn,
                       eval_every=eval_every, **proto_kw)
     mgr = None

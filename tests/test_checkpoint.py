@@ -157,6 +157,72 @@ def test_load_consensus_params_detects_stacked_and_flat(tmp_path):
                                    rtol=1e-6, atol=1e-6)
 
 
+def test_export_consensus_from_sharded_bf16(tmp_path):
+    """Regression: export_consensus on a worker-SHARDED checkpoint. bf16
+    leaves are stored as uint16 views per shard; stacking the shard bit
+    patterns and viewing back must be lossless, so the consensus average
+    equals the in-memory consensus bit-for-bit (fp32 mean, cast once)."""
+    M = 4
+    rng = np.random.default_rng(5)
+    # subnormals / large magnitudes: any fp32 widening detour would perturb
+    vals = np.concatenate([rng.normal(size=M * 6 * 7 - 3),
+                           [1e-40, -3e38, -0.0]])
+    stacked = {
+        "emb": jnp.asarray(vals, jnp.bfloat16).reshape(M, 6, 7),
+        "head": {"w": jnp.asarray(rng.normal(size=(M, 8, 3)), jnp.float32),
+                 "steps": jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)
+                                           [:, None], (M, 5))},
+    }
+    src = os.path.join(tmp_path, "gossip.npz")
+    dst = os.path.join(tmp_path, "serve.npz")
+    C.save_sharded(src, stacked, step=13)
+    assert not os.path.exists(src)          # only per-shard files on disk
+    mean = C.export_consensus(src, dst)
+    want = C.consensus_params(stacked)
+    import jax
+
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(want)[0],
+            jax.tree_util.tree_flatten_with_path(mean)[0]):
+        assert a.dtype == np.asarray(b).dtype and a.shape == b.shape, pa
+        assert np.array_equal(_bits(a), _bits(b)), pa
+    assert C.latest_step(dst) == 13         # step pulled from the shard meta
+    # and the exported file restores bit-exactly as a single replica
+    like = jax.tree.map(
+        lambda x: jnp.zeros(x.shape[1:], x.dtype), stacked)
+    back = C.restore(dst, like)
+    assert back["emb"].dtype == jnp.bfloat16
+    assert np.array_equal(_bits(back["emb"]), _bits(want["emb"]))
+
+
+def test_load_consensus_params_from_exported_sharded(tmp_path):
+    """Sharded gossip checkpoint → export_consensus → serving loader: the
+    full low-precision publish path the paper's serving handoff uses."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M_
+    from repro.serving.engine import load_consensus_params
+
+    cfg = get_config("granite-3-2b", reduced=True)
+    params = M_.init(jax.random.PRNGKey(1), cfg)
+    Mw = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (Mw,) + x.shape) *
+        jnp.arange(1, Mw + 1, dtype=x.dtype).reshape((Mw,) + (1,) * x.ndim),
+        params)
+    src = os.path.join(tmp_path, "gossip.npz")
+    C.save_sharded(src, stacked)
+    dst = os.path.join(tmp_path, "serve.npz")
+    C.export_consensus(src, dst)
+    loaded = load_consensus_params(dst, cfg)
+    want = jax.tree.map(lambda x: x * 2.0, params)  # mean of 1x,2x,3x = 2x
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # Async (background) checkpoint writer
 # ---------------------------------------------------------------------------

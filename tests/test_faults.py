@@ -438,6 +438,94 @@ def test_trace_roundtrip_preserves_fault_annotations(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Overlapping / adjacent fault windows: downtime is an interval union
+# (regression — the old FIFO start/stop pairing double-counted the overlap)
+# ---------------------------------------------------------------------------
+
+
+def _window_trace(windows, t_last=20.0):
+    """Trace with only LINK_DOWN/LINK_UP records: windows are
+    (start, end, link_class, pod) tuples, closed in event-time order."""
+    from repro.sim.trace import LINK_DOWN, LINK_UP, Trace, TraceRecord
+
+    tr = Trace(4)
+    evs = []
+    for (t0, t1, cls, pod) in windows:
+        evs.append((t0, LINK_DOWN, cls, pod))
+        evs.append((t1, LINK_UP, cls, pod))
+    for seq, (t, kind, cls, pod) in enumerate(sorted(evs)):
+        tr.record(TraceRecord(seq=seq, t=t, kind=kind, worker=-1, src=pod,
+                              link_class=cls))
+    tr.record(TraceRecord(seq=len(evs), t=t_last, kind="compute_done",
+                          worker=0))
+    return tr
+
+
+def test_overlapping_windows_downtime_counted_once():
+    """Pod-scoped dead [2, 8] + degraded [5, 12] on the same link: the link
+    is disturbed for 10 time units, not 6 + 7 = 13."""
+    tr = _window_trace([(2.0, 8.0, "dci", 0), (5.0, 12.0, "dci", 0)])
+    assert tr.link_accounting()["dci"]["downtime"] == pytest.approx(10.0)
+
+
+def test_adjacent_windows_downtime_is_contiguous():
+    tr = _window_trace([(2.0, 5.0, "dci", 0), (5.0, 9.0, "dci", 0)])
+    assert tr.link_accounting()["dci"]["downtime"] == pytest.approx(7.0)
+
+
+def test_nested_windows_downtime_is_outer_window():
+    tr = _window_trace([(1.0, 11.0, "dci", 0), (3.0, 6.0, "dci", 0)])
+    assert tr.link_accounting()["dci"]["downtime"] == pytest.approx(10.0)
+
+
+def test_distinct_pod_windows_still_sum():
+    """Different fault scopes are different links: no union across pods."""
+    tr = _window_trace([(2.0, 8.0, "dci", 0), (5.0, 12.0, "dci", 1)])
+    assert tr.link_accounting()["dci"]["downtime"] == pytest.approx(13.0)
+
+
+def test_open_overlapping_windows_close_at_trace_end():
+    tr = _window_trace([(2.0, 30.0, "dci", 0), (5.0, 40.0, "dci", 0)],
+                       t_last=20.0)
+    # both UPs land beyond the recorded horizon: one open interval [2, 20]
+    tr.records = [r for r in tr.records if r.kind != "link_up"]
+    assert tr.link_accounting()["dci"]["downtime"] == pytest.approx(18.0)
+
+
+def test_two_window_engine_totals_pinned():
+    """End-to-end regression: a pod-scoped dead window [2, 8] overlapping a
+    degraded window [5, 12] on the same pod + class. Downtime is the union
+    (10), every held message is charged (bytes / retried bytes) exactly
+    once, and held deliveries land after the dead window."""
+    topo = T.hier(2, 2)
+    dead = LinkFault(start=2.0, duration=6.0, link_class="dci", pod=0)
+    slow = LinkFault(start=5.0, duration=7.0, link_class="dci", pod=0,
+                     factor=4.0)
+    sc = Scenario(
+        name="det2w",
+        compute=scenarios.sampled(scenarios.deterministic(1.0)),
+        link_classes=scenarios.two_class_links(ici_latency=0.25,
+                                               dci_latency=1.0),
+        link_faults=(dead, slow), seed=0)
+    eng = Engine(topo, sc, mesh=MeshSpec.from_topology(topo))
+    tr = eng.run(SyncGossip(executor=None), until_round=5, max_time=60.0)
+    acct = tr.link_accounting()
+    assert acct["dci"]["downtime"] == pytest.approx(10.0)
+    dci = [r for r in tr.records if r.kind == "arrival"
+           and r.link_class == "dci"]
+    held = [r for r in dci if r.retried]
+    assert held, "no message crossed the dead window"
+    for r in held:
+        assert r.t >= dead.end + 1.0 - 1e-12
+    assert acct["dci"]["messages"] == len(dci)
+    assert acct["dci"]["bytes"] == pytest.approx(
+        len(dci) * eng.mesh.payload_bytes)
+    assert acct["dci"]["retried_messages"] == len(held)
+    assert acct["dci"]["retried_bytes"] == pytest.approx(
+        len(held) * eng.mesh.payload_bytes)
+
+
+# ---------------------------------------------------------------------------
 # Scenario validation (satellite)
 # ---------------------------------------------------------------------------
 
