@@ -30,6 +30,7 @@ BENCHES = [
     ("sim_scale", "benchmarks.bench_sim_scale"),
     ("faults", "benchmarks.bench_faults"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("serving", "benchmarks.bench_serving"),
 ]
 
 

@@ -1,6 +1,8 @@
-"""Batched serving demo: prefill + KV-cache decode with the wave batcher.
+"""Serving demo: continuous batching over a paged KV cache (default), or
+the lock-step wave baseline with ``--batcher wave``.
 
     PYTHONPATH=src python examples/serve_demo.py [--arch gemma-2b]
+    PYTHONPATH=src python examples/serve_demo.py --batcher wave
     PYTHONPATH=src python examples/serve_demo.py \
         --gossip-ckpt results/train_100m.npz --preset small
 
@@ -9,6 +11,9 @@ serve_step the decode dry-run shapes lower. With ``--gossip-ckpt`` the
 demo decodes from a decentralized-training checkpoint: the worker-stacked
 estimates are consensus-averaged (w̄ = (1/M)Σ w_j) into one serving replica
 via ``serving.engine.load_consensus_params``.
+
+Archs the paged cache can't serve (ssm/rglru/sliding-window/enc-dec)
+automatically fall back to the wave baseline.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -20,14 +25,19 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import model as M
-from repro.serving import WaveBatcher, generate
+from repro.serving import ContinuousBatcher, WaveBatcher, generate
 from repro.serving.engine import load_consensus_params
+from repro.serving.kvcache import paged_unsupported_reason
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=ARCH_NAMES)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batcher", default="continuous",
+                    choices=("continuous", "wave"),
+                    help="continuous = paged-KV slots refilled per request "
+                         "(production path); wave = lock-step baseline")
     ap.add_argument("--gossip-ckpt", default=None,
                     help="decode from a gossip-trained checkpoint "
                          "(train_100m.py output); implies --preset's config")
@@ -49,12 +59,37 @@ def main():
     rng = np.random.default_rng(0)
     print(f"serving {cfg.name}: d_model={cfg.d_model} layers={cfg.n_layers}")
 
-    wb = WaveBatcher(params, cfg, batch_slots=3, max_len=64)
-    rids = []
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
-        rids.append(wb.submit(prompt, n_new=8))
-    done = wb.run_until_done()
+    batcher = args.batcher
+    reason = paged_unsupported_reason(cfg)
+    if batcher == "continuous" and reason is not None:
+        print(f"paged cache unsupported for {cfg.name} ({reason}); "
+              f"falling back to the wave baseline")
+        batcher = "wave"
+
+    if batcher == "continuous":
+        cb = ContinuousBatcher(params, cfg, batch_slots=3, max_len=64,
+                               page_size=8, max_new=8)
+        cb.warmup()
+        rids = []
+        for i in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12))
+            rids.append(cb.submit(prompt, n_new=8))
+        done = cb.run_until_done()
+        st = cb.stats()
+        print(f"continuous: occupancy={st['mean_occupancy']:.2f} "
+              f"decode_traces={st['decode_traces']} "
+              f"bucket_misses={st['bucket_misses']}")
+    else:
+        wb = WaveBatcher(params, cfg, batch_slots=3, max_len=64)
+        # recurrent kinds (ssm/rglru) can't take ragged waves: pad tokens
+        # would pollute the per-slot recurrent state, so batch equal lengths
+        recurrent = set(cfg.layer_kinds) - {"attn", "local"}
+        rids = []
+        for i in range(args.requests):
+            size = 8 if recurrent else int(rng.integers(4, 12))
+            prompt = rng.integers(0, cfg.vocab_size, size=size)
+            rids.append(wb.submit(prompt, n_new=8))
+        done = wb.run_until_done()
     for rid in rids:
         print(f"request {rid}: generated tokens {done[rid].tolist()}")
 

@@ -155,8 +155,11 @@ def make_train_step(
         M = gossip.topology.M
         # Fused bus path: mix + update land in ONE Pallas VMEM pass over the
         # flat parameter buffer (mix_first only — adapt-then-combine needs
-        # the update applied before the mix, so it stays on the generic path).
-        fuse_update = gossip.resolved_backend() == "fused" and mix_first
+        # the update applied before the mix, so it stays on the generic path;
+        # hierarchical specs run as TWO staged mixes, so the single-pass
+        # fusion doesn't apply either).
+        fuse_update = (gossip.resolved_backend() == "fused" and mix_first
+                       and not gossip.hierarchical)
 
         def step(state: TrainState, batch: PyTree) -> tuple[TrainState, StepMetrics]:
             # batch leaves: (M, per_worker_batch, ...)

@@ -73,6 +73,13 @@ class GossipSpec:
         (SGP-style). Degree-1 communication per step, exact consensus every
         log2(M) rounds — strictly cheaper than the paper's static ring with
         faster mixing.
+      hierarchical: execute a kronecker/`hier` topology as its TWO factored
+        stages (intra-pod then cross-pod — :func:`split_hierarchical` /
+        :func:`hierarchical_mix`) instead of one mix with the product
+        matrix. Mathematically identical consensus matrix, but the lowered
+        collectives factor too: the intra stage's permutations ride only
+        ICI (pod-local), the inter stage's ride only the pod (DCI) axis —
+        the property the dryrun `--hier-smoke` lane HLO-asserts.
     """
 
     topology: Topology
@@ -81,6 +88,7 @@ class GossipSpec:
     model_axis: str | None = None
     period: int = 1
     time_varying: str | None = None
+    hierarchical: bool = False
 
     @classmethod
     def for_mesh(cls, topology: Topology, wmesh, **kw) -> "GossipSpec":
@@ -185,6 +193,12 @@ def _shard_map_mix(params: PyTree, spec: GossipSpec, mesh, leaf_fn,
 def mix_pytree(params: PyTree, spec: GossipSpec, mesh=None, *,
                param_specs: PyTree | None = None) -> PyTree:
     """Consensus step over the parameter pytree (leaves have leading M dim)."""
+    if spec.hierarchical:
+        intra, inter = split_hierarchical(
+            dataclasses.replace(spec, hierarchical=False))
+        return mix_pytree(mix_pytree(params, intra, mesh,
+                                     param_specs=param_specs),
+                          inter, mesh, param_specs=param_specs)
     backend = spec.resolved_backend()
     if backend not in ("einsum", "fused", "allreduce", "ppermute"):
         raise ValueError(f"unknown gossip backend {backend!r}")

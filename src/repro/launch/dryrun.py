@@ -55,7 +55,7 @@ def shape_applicable(cfg: ModelConfig, shape_name: str) -> bool:
     return True
 
 
-def make_topology(name: str, M_: int, degree: int = 2):
+def make_topology(name: str, M_: int, degree: int = 2, pod_size: int = 16):
     if name == "ring":
         return topo_lib.undirected_ring(M_)
     if name == "clique":
@@ -69,11 +69,13 @@ def make_topology(name: str, M_: int, degree: int = 2):
     if name == "hier":
         # hierarchical multi-pod: inter-pod pairing ⊗ intra-pod ring —
         # cross-pod gossip collapses to one permutation class instead of the
-        # flat ring's pod-spanning edges (beyond-paper §Perf)
-        assert M_ % 16 == 0
-        pods = M_ // 16
+        # flat ring's pod-spanning edges (beyond-paper §Perf). pod_size
+        # follows the mesh's workers-per-pod so node index = pod-major
+        # worker index (matches WorkerMesh coordinate order).
+        assert M_ % pod_size == 0
+        pods = M_ // pod_size
         outer = topo_lib.clique(max(pods, 1))
-        return topo_lib.kronecker(outer, topo_lib.undirected_ring(16))
+        return topo_lib.kronecker(outer, topo_lib.undirected_ring(pod_size))
     raise ValueError(name)
 
 
@@ -168,7 +170,8 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
                       moe_shard: str | None = None,
                       save_hlo: str | None = None,
                       donate: bool = True,
-                      reduced: bool = False) -> DryrunResult:
+                      reduced: bool = False,
+                      hierarchical: bool = False) -> DryrunResult:
     cfg = get_config(arch, reduced=True) if reduced else get_config(arch)
     overrides = {}
     if moe_dispatch:
@@ -206,9 +209,14 @@ def build_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
         ins = input_specs(cfg, shape_name, wm, mode)
 
         if kind == "train":
-            topo = make_topology(topology, wm.n_workers)
+            # hier pod_size follows the mesh: workers-per-pod, so the
+            # kronecker node order == pod-major worker index order
+            pod_size = (wm.n_workers // mesh.shape["pod"]
+                        if multi_pod and topology == "hier" else 16)
+            topo = make_topology(topology, wm.n_workers, pod_size=pod_size)
             gspec = GossipSpec.for_mesh(topo, wm, backend=gossip_backend,
-                                        period=gossip_period)
+                                        period=gossip_period,
+                                        hierarchical=hierarchical)
             if mode == "gossip":
                 params_abs = _prepend_workers(params_abs, wm.n_workers)
             pspec = shard_lib.param_pspecs(cfg, wm, mode,
@@ -345,9 +353,17 @@ def main(argv=None) -> int:
     ap.add_argument("--tag", default="")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--hierarchical", action="store_true",
+                    help="stage the gossip mix as intra-pod (ICI) then "
+                         "inter-pod (DCI) rounds (GossipSpec.hierarchical)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI lane: host-forced multi-pod WorkerMesh, reduced "
                          "nemotron, gossip mode (technique ON) must lower")
+    ap.add_argument("--hier-smoke", action="store_true",
+                    help="CI lane: hier topology × model sharding on a "
+                         "host-forced multi-pod mesh; HLO-assert cross-pod "
+                         "permutes ride only the pod (DCI) axis while "
+                         "intra-pod stages stay ICI")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -373,6 +389,42 @@ def main(argv=None) -> int:
               f"cp_bytes={int((res.collectives or {}).get('collective-permute', 0))}")
         assert counts.get("collective-permute", 0) > 0, \
             "gossip mode must lower to collective-permutes"
+        return 0
+
+    if args.hier_smoke:
+        # ROADMAP "hier × model sharding": the staged hierarchical mix on the
+        # multi-pod mesh must produce ONLY pure link classes — intra-pod
+        # stages ride ICI, the inter-pod stage rides the pod (DCI) axis —
+        # and no permute may mix the two.
+        import tempfile
+
+        import repro.launch.mesh as mesh_lib
+        from repro.launch import hlo_cost as hc_lib
+        n = len(jax.devices())
+        assert n >= 8, f"hier-smoke lane needs ≥8 forced host devices, got {n}"
+        mesh_lib.MULTI_POD = (2, 2, 2)
+        INPUT_SHAPES.setdefault(
+            "train_smoke", dict(seq_len=64, global_batch=8, kind="train"))
+        hlo_path = os.path.join(tempfile.mkdtemp(), "hier_smoke.hlo")
+        res = run_one(args.arch or "nemotron-4-340b", "train_smoke",
+                      multi_pod=True, topology="hier",
+                      gossip_backend=args.gossip_backend, mode="gossip",
+                      reduced=True, hierarchical=True, save_hlo=hlo_path)
+        if not res.ok:
+            print(res.error)
+            return 2
+        with open(hlo_path) as f:
+            hlo = f.read()
+        wm = make_worker_mesh(multi_pod=True)
+        classes = hc_lib.permute_link_classes(hlo, wm)
+        print(f"HIER SMOKE {res.arch} on multipod {mesh_lib.MULTI_POD}: "
+              f"{wm.describe()}; permute classes ici={classes['ici']} "
+              f"dci={classes['dci']} mixed={classes['mixed']}")
+        assert classes["ici"] > 0, "intra-pod gossip stage must lower to ICI permutes"
+        assert classes["dci"] > 0, "inter-pod gossip stage must lower to DCI permutes"
+        assert classes["mixed"] == 0, (
+            "hierarchical gossip must not emit pod-crossing permutes that also "
+            f"move along non-pod axes: {classes['ops']}")
         return 0
 
     if args.all:
@@ -409,7 +461,8 @@ def main(argv=None) -> int:
                   shard_activations=args.shard_activations,
                   parallel_block=args.parallel_block,
                   moe_shard=args.moe_shard,
-                  mode=args.mode, save_hlo=args.save_hlo)
+                  mode=args.mode, save_hlo=args.save_hlo,
+                  hierarchical=args.hierarchical)
     path = save_result(res, args.tag)
     if res.ok:
         r = res.roofline

@@ -263,3 +263,63 @@ def analyze_hlo(hlo: str) -> HloCost:
                 nbytes += (rbytes + obytes) * mult
     return HloCost(flops=flops, bytes=nbytes, coll_bytes=coll,
                    coll_counts=coll_n, dot_flops_detail=n_dots)
+
+
+# ---------------------------------------------------------------------------
+# Collective-permute link classification (ICI vs DCI)
+# ---------------------------------------------------------------------------
+
+_PAIRS_RE = re.compile(r"collective-permute[\w-]*\([^)]*\).*?"
+                       r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+
+
+def permute_link_classes(hlo: str, mesh, pod_axis: str = "pod") -> dict:
+    """Classify every collective-permute in compiled HLO as ICI or DCI.
+
+    ``source_target_pairs`` carry partition ids, which index the executable's
+    device assignment — ``mesh.devices.flatten()`` order for a jit over the
+    mesh — so ``np.unravel_index(pid, mesh.devices.shape)`` recovers each
+    endpoint's mesh coordinates. An op is:
+
+      * ``ici``   — every non-self pair stays within one pod;
+      * ``dci``   — every non-self pair crosses pods AND preserves all
+                    non-pod coordinates (the permutation rides ONLY the pod
+                    axis — pure DCI, no incidental intra-pod hops);
+      * ``mixed`` — anything else (e.g. a flat ring whose edges wrap across
+                    a pod boundary while also shifting the data coord).
+
+    The hierarchical-gossip CI gate asserts ici > 0, dci > 0, mixed == 0.
+    """
+    import numpy as np
+
+    mesh = getattr(mesh, "mesh", mesh)            # WorkerMesh → Mesh
+    axis_names = tuple(mesh.axis_names)
+    if pod_axis not in axis_names:
+        raise ValueError(f"mesh has no {pod_axis!r} axis: {axis_names}")
+    pod_i = axis_names.index(pod_axis)
+    shape = mesh.devices.shape
+    out = {"ici": 0, "dci": 0, "mixed": 0, "ops": []}
+    for m in _PAIRS_RE.finditer(hlo):
+        pairs = [(int(a), int(b)) for a, b in _PAIR_RE.findall(m.group(1))]
+        classes = set()
+        for s, t in pairs:
+            if s == t:
+                continue
+            sc = np.unravel_index(s, shape)
+            tc = np.unravel_index(t, shape)
+            same_pod = sc[pod_i] == tc[pod_i]
+            others_fixed = all(a == b for i, (a, b) in enumerate(zip(sc, tc))
+                               if i != pod_i)
+            if same_pod:
+                classes.add("ici")
+            elif others_fixed:
+                classes.add("dci")
+            else:
+                classes.add("mixed")
+        if not classes:
+            continue                               # all-self-pairs no-op
+        cls = classes.pop() if len(classes) == 1 else "mixed"
+        out[cls] += 1
+        out["ops"].append({"class": cls, "n_pairs": len(pairs)})
+    return out

@@ -184,6 +184,113 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                    jnp.zeros((), jnp.int32))
 
 
+class PagedKVCache(NamedTuple):
+    """Block-table paged KV cache: decode slots admit/retire independently.
+
+    Unlike :class:`KVCache` (one scalar insertion position shared by the
+    whole batch), every slot carries its own length, so the continuous
+    batcher can refill a freed slot mid-flight while the others keep
+    decoding. Physical storage is a pool of fixed-size pages; slot `s`'s
+    logical block `b` lives in page ``block_tables[s, b]``. Retired slots
+    point their whole table row at a reserved dump page, so in-flight
+    writes from inactive slots can never touch a reassigned page.
+
+    ``lengths`` is NOT advanced by the attention module — all layers share
+    one logical position per slot, so the serving engine bumps it once per
+    decode step (masked by the active-slot set).
+    """
+
+    k_pages: jax.Array       # (P, page, Kh, hd)
+    v_pages: jax.Array       # (P, page, Kh, hd)
+    block_tables: jax.Array  # (S, NB) int32 — physical page per logical block
+    lengths: jax.Array       # (S,) int32 — tokens cached per slot
+
+
+class PagedMLACache(NamedTuple):
+    """Paged variant of :class:`MLACache` (pages over the compressed dim)."""
+
+    ckv_pages: jax.Array     # (P, page, kv_lora)
+    kr_pages: jax.Array      # (P, page, rope_dim)
+    block_tables: jax.Array  # (S, NB) int32
+    lengths: jax.Array       # (S,) int32
+
+
+def _paged_write(pages: jax.Array, block_tables: jax.Array,
+                 lengths: jax.Array, new: jax.Array) -> jax.Array:
+    """Write one new token per slot at its logical position ``lengths[s]``.
+
+    new: (S, 1, ...) — the fresh per-slot k/v/ckv row. Distinct live slots
+    own distinct pages (PagePool invariant) so the scatter has no
+    collisions; retired slots all target the dump page (content unread)."""
+    page = pages.shape[1]
+    pid = jnp.take_along_axis(block_tables, (lengths // page)[:, None],
+                              axis=1)[:, 0]
+    return pages.at[pid, lengths % page].set(new[:, 0])
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                           scale=None) -> jax.Array:
+    """Gather-free paged decode attention (GQA-grouped).
+
+    Scores are computed against the ENTIRE page pool in place; the block
+    table then gathers only the tiny (S, H, NB, page) score tensor, and the
+    softmax probabilities scatter back into a pool-shaped buffer for the
+    value contraction. Each page pool is read exactly once per step — no
+    materialized per-slot context copy and no repeat_kv tiling, which
+    together move ~3x the pool bytes in the gather-and-copy formulation
+    (the dominant decode cost at serving batch sizes). Pages outside a
+    slot's table contribute garbage scores that the validity mask zeroes,
+    and masked probabilities scattering onto the shared dump page collide
+    only with other exact zeros. XLA twin of a Pallas/flashinfer-style
+    paged kernel, which would consume the block table directly (kernels/
+    follow-up, see EXPERIMENTS.md §Serving)."""
+    S, _, H, hd = q.shape
+    Pn, page, Kh, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    G = H // Kh
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q[:, 0].reshape(S, Kh, G, hd)
+    s_all = jnp.einsum("skgd,cpkd->skgcp", qg, k_pages,
+                       preferred_element_type=jnp.float32) * scale
+    idx = block_tables[:, None, None, :, None]              # (S,1,1,NB,1)
+    s = jnp.take_along_axis(s_all, idx, axis=3)             # (S,Kh,G,NB,page)
+    s = s.reshape(S, Kh, G, NB * page)
+    valid = jnp.arange(NB * page)[None, :] <= lengths[:, None]
+    s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).reshape(S, Kh, G, NB, page)
+    p_pool = jnp.zeros((S, Kh, G, Pn, page), p.dtype)
+    p_pool = p_pool.at[jnp.arange(S)[:, None], :, :, block_tables].set(
+        p.transpose(0, 3, 1, 2, 4))
+    o = jnp.einsum("skgcp,cpkd->skgd", p_pool.astype(v_pages.dtype), v_pages)
+    return o.reshape(S, 1, H, hd)
+
+
+def slot_decode_attention(q, k_ctx, v_ctx, kv_valid, scale=None) -> jax.Array:
+    """One-token-per-slot decode attention with per-slot validity.
+
+    q: (S, 1, H, hd); k_ctx/v_ctx: (S, Lkv, Kh, hd); kv_valid: (S, Lkv).
+    Causality is entirely encoded in kv_valid — each slot's query is its
+    newest token, so every valid key is attendable. Used by the paged
+    decode path and the ragged (per-slot prompt length) dense decode."""
+    H = q.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    k_ctx = repeat_kv(k_ctx, H)
+    v_ctx = repeat_kv(v_ctx, H)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k_ctx,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + jnp.where(kv_valid, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).astype(v_ctx.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v_ctx)
+
+
+def _ragged_kv_valid(S: int, lengths: jax.Array, prompt_len: int,
+                     pos) -> jax.Array:
+    """(B, S) cache-slot validity for right-padded ragged prompts: real
+    prompt columns [0, len_b), decode columns [prompt_len, pos+1)."""
+    idx = jnp.arange(S)[None, :]
+    return ((idx < lengths[:, None]) | (idx >= prompt_len)) & (idx < pos + 1)
+
+
 def _is_ring(cache: KVCache, window: int | None) -> bool:
     """Static: the cache is a ring buffer iff it is exactly window-sized."""
     return window is not None and cache.k.shape[1] == window
@@ -235,14 +342,22 @@ def _seq_parallel_decode_attention(q, ck, cv, qp, *, window, kv_valid, scale):
 
 
 def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, q_base: int = 0,
-              causal=True, window=None, cache: KVCache | None = None,
-              memory: jax.Array | None = None):
+              causal=True, window=None, cache=None,
+              memory: jax.Array | None = None, lengths=None,
+              prompt_len: int | None = None):
     """Self-attention (optionally cached decode) or cross-attention.
 
     memory: if given, keys/values come from memory (cross-attention, no cache
     path needed for training; decode uses precomputed memory each step).
+    lengths: (B,) per-sequence true prompt lengths for RIGHT-padded ragged
+    batches. In prefill (L > 1) pad keys are masked out of attention (and
+    marked invalid for the cached decode that follows); in cached decode
+    (L == 1, with `prompt_len` = the static padded prompt width) rope
+    positions become per-slot (len_b + t) and the original pad columns stay
+    masked — batched ragged greedy decode matches unbatched exactly.
     """
     B, L, D = x.shape
+    paged = isinstance(cache, PagedKVCache)
     q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
     kv_src = memory if memory is not None else x
     k = jnp.einsum("bld,dhk->blhk", kv_src, params["wk"])
@@ -253,6 +368,12 @@ def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, q_base: int = 0,
     if memory is None:  # rope only for self-attention
         if positions is not None:
             q_pos = positions
+        elif paged:
+            q_pos = cache.lengths[:, None]  # (S, 1) per-slot positions
+        elif cache is not None and lengths is not None and L == 1:
+            # ragged decode: token t of sequence b sits at column
+            # prompt_len + t but its logical position is len_b + t
+            q_pos = (cache.pos - (prompt_len - lengths))[:, None]
         elif cache is not None:
             q_pos = cache.pos + jnp.arange(L)
         else:
@@ -260,12 +381,28 @@ def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, q_base: int = 0,
         q = rope(q, q_pos, cfg.rope_theta)
         k = rope(k, q_pos, cfg.rope_theta)
 
+    if paged:
+        # paged decode: write the new token at each slot's own length, then
+        # attend over the slot's block-table context with per-slot validity
+        assert L == 1, "paged KV cache is decode-only (prefill scatters in)"
+        kp = _paged_write(cache.k_pages, cache.block_tables, cache.lengths, k)
+        vp = _paged_write(cache.v_pages, cache.block_tables, cache.lengths, v)
+        o = paged_decode_attention(q, kp, vp, cache.block_tables,
+                                   cache.lengths)
+        new_cache = PagedKVCache(kp, vp, cache.block_tables, cache.lengths)
+        return jnp.einsum("blhk,hkd->bld", o, params["wo"]), new_cache
+
     new_cache = None
     if cache is not None and L > 1:
         # prefill: cache assumed empty (pos = 0); attention over fresh k/v via
         # the blockwise path (no quadratic score materialization at 32k),
-        # then write the prompt's k/v into the cache.
-        o = attention_any(q, k, v, 0, causal=causal, window=window)
+        # then write the prompt's k/v into the cache. Right-padded ragged
+        # prompts mask their pad keys so they never leak into attention.
+        kv_valid = None
+        if lengths is not None:
+            kv_valid = jnp.arange(L)[None, :] < lengths[:, None]
+        o = attention_any(q, k, v, 0, causal=causal, window=window,
+                          kv_valid=kv_valid)
         if _is_ring(cache, window):
             W = cache.k.shape[1]
             if L >= W:
@@ -285,6 +422,11 @@ def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, q_base: int = 0,
 
     if cache is not None:
         if _is_ring(cache, window):
+            if lengths is not None:
+                raise NotImplementedError(
+                    "ragged prompt lengths with a sliding-window ring cache: "
+                    "batch equal-length prompts instead (WaveBatcher only "
+                    "passes lengths when a wave is actually ragged)")
             W = cache.k.shape[1]
             slot = cache.pos % W
             ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, 1)
@@ -307,6 +449,13 @@ def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, q_base: int = 0,
             cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, cache.pos, 1)
             new_cache = KVCache(ck, cv, cache.pos + L)
             S = ck.shape[1]
+            if lengths is not None:
+                # ragged decode: original pad columns [len_b, prompt_len)
+                # stay masked; q positions were set per-slot above
+                kv_valid = _ragged_kv_valid(S, lengths, prompt_len, cache.pos)
+                o = slot_decode_attention(q, ck, cv, kv_valid)
+                out = jnp.einsum("blhk,hkd->bld", o, params["wo"])
+                return out, new_cache
             kv_valid = jnp.arange(S)[None, :] < (cache.pos + L)
             kv_valid = jnp.broadcast_to(kv_valid, (B, S))
             qp = cache.pos + jnp.arange(L)
@@ -360,8 +509,49 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> MLACach
     )
 
 
+def _mla_absorbed_scores(params, q_nope, q_rope, ckv_all, kr_all, scale):
+    """Absorbed-form decode scores in compressed space: (B, H, L, S)."""
+    q_abs = jnp.einsum("blhk,rhk->blhr", q_nope, params["w_uk"])
+    s = (jnp.einsum("blhr,bsr->bhls", q_abs, ckv_all, preferred_element_type=jnp.float32)
+         + jnp.einsum("blhk,bsk->bhls", q_rope, kr_all, preferred_element_type=jnp.float32))
+    return s * scale
+
+
+def _mla_absorbed_out(params, p, ckv_all):
+    o_c = jnp.einsum("bhls,bsr->blhr", p.astype(ckv_all.dtype), ckv_all)
+    o = jnp.einsum("blhr,rhk->blhk", o_c, params["w_uv"])        # absorb W_uv
+    return jnp.einsum("blhk,hkd->bld", o, params["wo"])
+
+
+def _mla_paged_attention(params, q_nope, q_rope, ckv_pages, kr_pages,
+                         block_tables, lengths, scale):
+    """Gather-free absorbed MLA decode over the page pools — same pool-
+    in-place score / tiny-score-gather / probability-scatter structure as
+    :func:`paged_decode_attention`, in compressed (kv_lora) space."""
+    S, _, H, _ = q_nope.shape
+    Pn, page, r = ckv_pages.shape
+    NB = block_tables.shape[1]
+    q_abs = jnp.einsum("blhk,rhk->blhr", q_nope, params["w_uk"])[:, 0]
+    s_all = (jnp.einsum("shr,cpr->shcp", q_abs, ckv_pages,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("shk,cpk->shcp", q_rope[:, 0], kr_pages,
+                          preferred_element_type=jnp.float32)) * scale
+    idx = block_tables[:, None, :, None]                    # (S,1,NB,1)
+    s = jnp.take_along_axis(s_all, idx, axis=2).reshape(S, H, NB * page)
+    valid = jnp.arange(NB * page)[None, :] <= lengths[:, None]
+    s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, :]
+    p = jax.nn.softmax(s, axis=-1).reshape(S, H, NB, page)
+    p_pool = jnp.zeros((S, H, Pn, page), p.dtype)
+    p_pool = p_pool.at[jnp.arange(S)[:, None], :, block_tables].set(
+        p.transpose(0, 2, 1, 3))
+    o_c = jnp.einsum("shcp,cpr->shr", p_pool.astype(ckv_pages.dtype),
+                     ckv_pages)
+    o = jnp.einsum("shr,rhk->shk", o_c, params["w_uv"])
+    return jnp.einsum("shk,hkd->sd", o, params["wo"])[:, None]
+
+
 def mla_apply(params, cfg: ModelConfig, x, *, q_base: int = 0,
-              cache: MLACache | None = None):
+              cache=None, lengths=None, prompt_len: int | None = None):
     B, L, D = x.shape
     H = cfg.n_heads
     r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -373,6 +563,20 @@ def mla_apply(params, cfg: ModelConfig, x, *, q_base: int = 0,
     ckv = rmsnorm_apply(params["kv_norm"], dkv[..., :r], cfg.norm_eps)
     k_rope_in = dkv[..., r:][:, :, None, :]                      # (B,L,1,dr)
 
+    if isinstance(cache, PagedMLACache):
+        # paged decode — absorbed form over the slot's block-table context
+        assert L == 1, "paged MLA cache is decode-only (prefill scatters in)"
+        qp = cache.lengths[:, None]                              # (S, 1)
+        q_rope = rope(q_rope, qp, cfg.rope_theta)
+        k_rope_new = rope(k_rope_in, qp, cfg.rope_theta)[:, :, 0]
+        cp = _paged_write(cache.ckv_pages, cache.block_tables, cache.lengths, ckv)
+        kp = _paged_write(cache.kr_pages, cache.block_tables, cache.lengths,
+                          k_rope_new)
+        out = _mla_paged_attention(params, q_nope, q_rope, cp, kp,
+                                   cache.block_tables, cache.lengths, scale)
+        new_cache = PagedMLACache(cp, kp, cache.block_tables, cache.lengths)
+        return out, new_cache
+
     if cache is None or L > 1:
         # training forward, or prefill (cache assumed empty): expanded form
         q_pos = q_base + jnp.arange(L)
@@ -383,7 +587,11 @@ def mla_apply(params, cfg: ModelConfig, x, *, q_base: int = 0,
         k = jnp.concatenate([k_nope, jnp.broadcast_to(
             k_rope[:, :, None, :], (B, L, H, dr))], axis=-1)
         qq = jnp.concatenate([q_nope, q_rope], axis=-1)
-        o = attention_any(qq, k, v, q_base, causal=True, scale=scale)
+        kv_valid = None
+        if lengths is not None:  # ragged right-padded prefill: mask pad keys
+            kv_valid = jnp.arange(L)[None, :] < lengths[:, None]
+        o = attention_any(qq, k, v, q_base, causal=True, scale=scale,
+                          kv_valid=kv_valid)
         new_cache = None
         if cache is not None:
             new_cache = MLACache(
@@ -393,24 +601,26 @@ def mla_apply(params, cfg: ModelConfig, x, *, q_base: int = 0,
         return jnp.einsum("blhk,hkd->bld", o, params["wo"]), new_cache
 
     # cached decode — absorbed form: score in compressed space
-    qp = cache.pos + jnp.arange(L)
+    if lengths is not None:
+        qp = (cache.pos - (prompt_len - lengths))[:, None]       # (B, 1)
+    else:
+        qp = cache.pos + jnp.arange(L)
     q_rope = rope(q_rope, qp, cfg.rope_theta)
     k_rope_new = rope(k_rope_in, qp, cfg.rope_theta)[:, :, 0]
     ckv_all = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv, cache.pos, 1)
     kr_all = jax.lax.dynamic_update_slice_in_dim(cache.krope, k_rope_new, cache.pos, 1)
     new_cache = MLACache(ckv_all, kr_all, cache.pos + L)
     S = ckv_all.shape[1]
-    # absorb W_uk into q: q' = q_nope @ W_uk^T  -> (B,L,H,r)
-    q_abs = jnp.einsum("blhk,rhk->blhr", q_nope, params["w_uk"])
-    s = (jnp.einsum("blhr,bsr->bhls", q_abs, ckv_all, preferred_element_type=jnp.float32)
-         + jnp.einsum("blhk,bsk->bhls", q_rope, kr_all, preferred_element_type=jnp.float32))
-    s = s * scale
+    s = _mla_absorbed_scores(params, q_nope, q_rope, ckv_all, kr_all, scale)
+    if lengths is not None:
+        # ragged decode: original pad columns [len_b, prompt_len) stay masked
+        kv_valid = _ragged_kv_valid(S, lengths, prompt_len, cache.pos)
+        s = s + jnp.where(kv_valid, 0.0, NEG_INF)[:, None, None, :]
+        p = jax.nn.softmax(s, axis=-1)
+        return _mla_absorbed_out(params, p, ckv_all), new_cache
     kv_valid = jnp.arange(S)[None, :] < (cache.pos + L)
     causal_ok = jnp.arange(S)[None, :] <= qp[:, None]
-    ok = kv_valid[:, None, :] & causal_ok[None]  # (B?, L, S) broadcast
     s = s + jnp.where(causal_ok[None, None], 0.0, NEG_INF) \
           + jnp.where(kv_valid[:, None, None, :], 0.0, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o_c = jnp.einsum("bhls,bsr->blhr", p.astype(ckv_all.dtype), ckv_all)
-    o = jnp.einsum("blhr,rhk->blhk", o_c, params["w_uv"])        # absorb W_uv
-    return jnp.einsum("blhk,hkd->bld", o, params["wo"]), new_cache
+    return _mla_absorbed_out(params, p, ckv_all), new_cache

@@ -150,8 +150,15 @@ def init(key: jax.Array, cfg: ModelConfig) -> PyTree:
 
 
 def _block_apply(bp: PyTree, cfg: ModelConfig, kind: str, moe: bool, x,
-                 q_base, cache, memory, cross_kv):
-    """One residual block. cache / cross_kv may be None (training)."""
+                 q_base, cache, memory, cross_kv, lengths=None,
+                 prompt_len=None):
+    """One residual block. cache / cross_kv may be None (training).
+
+    lengths (B,) + prompt_len mark right-padded ragged prompts: attention
+    masks the pad keys and offsets per-row rope positions. Recurrent kinds
+    (ssm/rglru) carry pad tokens through their state, so ragged batches are
+    rejected — equal-length batching (WaveBatcher) remains their path.
+    """
     aux = jnp.zeros((), jnp.float32)
     h = L.rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
     window = _self_window(cfg, kind)
@@ -159,13 +166,24 @@ def _block_apply(bp: PyTree, cfg: ModelConfig, kind: str, moe: bool, x,
         and kind in ("attn", "local")
     if kind in ("attn", "local"):
         if cfg.attention_type == "mla":
-            mixed, new_c = attn_lib.mla_apply(bp["mix"], cfg, h, q_base=q_base, cache=cache)
+            mixed, new_c = attn_lib.mla_apply(bp["mix"], cfg, h, q_base=q_base,
+                                              cache=cache, lengths=lengths,
+                                              prompt_len=prompt_len)
         else:
             mixed, new_c = attn_lib.gqa_apply(
-                bp["mix"], cfg, h, q_base=q_base, causal=True, window=window, cache=cache)
+                bp["mix"], cfg, h, q_base=q_base, causal=True, window=window,
+                cache=cache, lengths=lengths, prompt_len=prompt_len)
     elif kind == "ssm":
+        if lengths is not None:
+            raise NotImplementedError(
+                "ragged prompts pollute mamba2 recurrent state; batch "
+                "equal-length prompts instead")
         mixed, new_c = ssm_lib.mamba2_apply(bp["mix"], cfg, h, cache=cache)
     elif kind == "rglru":
+        if lengths is not None:
+            raise NotImplementedError(
+                "ragged prompts pollute rglru recurrent state; batch "
+                "equal-length prompts instead")
         mixed, new_c = rglru_lib.rglru_apply(bp["mix"], cfg, h, cache=cache)
     else:
         raise ValueError(kind)
@@ -276,7 +294,8 @@ def _act_shard(x, cfg: ModelConfig):
 
 def forward(params, cfg: ModelConfig, tokens, *, q_base: int = 0,
             caches: list | None = None, memory: jax.Array | None = None,
-            cross_kvs: list | None = None):
+            cross_kvs: list | None = None, lengths=None,
+            prompt_len: int | None = None):
     """Decoder forward. Returns (hidden, new_caches, moe_aux)."""
     x = _embed(params, cfg, tokens)
     x = _act_shard(x, cfg)
@@ -293,7 +312,9 @@ def forward(params, cfg: ModelConfig, tokens, *, q_base: int = 0,
                 if cfg.remat:
                     fn = jax.checkpoint(
                         lambda bp, x, c, k, _f=fn: _f(bp, x=x, q_base=q_base,
-                                                      cache=c, memory=memory, cross_kv=k))
+                                                      cache=c, memory=memory,
+                                                      cross_kv=k, lengths=lengths,
+                                                      prompt_len=prompt_len))
                     x, nc, aux = fn(sp[li], x,
                                     cache_s[li] if cache_s is not None else None,
                                     ckv_s[li] if ckv_s is not None else None)
@@ -301,7 +322,8 @@ def forward(params, cfg: ModelConfig, tokens, *, q_base: int = 0,
                     x, nc, aux = fn(sp[li], x=x, q_base=q_base,
                                     cache=cache_s[li] if cache_s is not None else None,
                                     memory=memory,
-                                    cross_kv=ckv_s[li] if ckv_s is not None else None)
+                                    cross_kv=ckv_s[li] if ckv_s is not None else None,
+                                    lengths=lengths, prompt_len=prompt_len)
                 aux_total = aux_total + aux
                 seg_new.append(nc)
             new_caches.append(seg_new)
@@ -315,7 +337,8 @@ def forward(params, cfg: ModelConfig, tokens, *, q_base: int = 0,
                 c = inp[1] if has_cache else None
                 k = (inp[2] if has_cache else inp[1]) if has_ckv else None
                 xo, nc, aux = _block_apply(bp, cfg, seg.kind, seg.moe, x,
-                                           q_base, c, memory, k)
+                                           q_base, c, memory, k, lengths,
+                                           prompt_len)
                 xo = _act_shard(xo, cfg)
                 return (xo, auxc + aux), nc
 
@@ -431,22 +454,39 @@ def precompute_cross_kv(params, cfg: ModelConfig, memory: jax.Array):
 
 
 def prefill(params, cfg: ModelConfig, tokens, max_len: int | None = None,
-            enc_embeds=None):
-    """Run the prompt, building caches; returns logits of the last position."""
+            enc_embeds=None, lengths=None):
+    """Run the prompt, building caches; returns logits of the last position.
+
+    With ``lengths`` (B,), tokens are RIGHT-padded ragged prompts: pad keys
+    are masked out of attention and the returned logits are gathered at each
+    row's last *real* position (column lengths[b]-1), not the pad tail.
+    """
     B, Lp = tokens.shape
     max_len = max_len or Lp
     memory = encode(params, cfg, enc_embeds) if cfg.encoder_layers else None
     cross_kvs = precompute_cross_kv(params, cfg, memory) if memory is not None else None
     caches = init_cache(params, cfg, B, max_len)
     h, new_caches, _ = forward(params, cfg, tokens, caches=caches,
-                               memory=memory, cross_kvs=cross_kvs)
-    logits = logits_from_hidden(params, cfg, h[:, -1:])
+                               memory=memory, cross_kvs=cross_kvs,
+                               lengths=lengths, prompt_len=Lp)
+    if lengths is not None:
+        h_last = h[jnp.arange(B), lengths - 1][:, None, :]
+    else:
+        h_last = h[:, -1:]
+    logits = logits_from_hidden(params, cfg, h_last)
     return logits, new_caches, cross_kvs, memory
 
 
 def decode_step(params, cfg: ModelConfig, caches, token, *, memory=None,
-                cross_kvs=None):
-    """One decode step. token: (B, 1) int32 → (logits (B, 1, V), new caches)."""
+                cross_kvs=None, lengths=None, prompt_len: int | None = None):
+    """One decode step. token: (B, 1) int32 → (logits (B, 1, V), new caches).
+
+    lengths/prompt_len continue a ragged prefill: rope positions per row run
+    lengths[b], lengths[b]+1, ... and the original pad columns stay masked.
+    Omit both when decoding against a paged cache — per-slot positions come
+    from the cache's own lengths.
+    """
     h, new_caches, _ = forward(params, cfg, token, caches=caches,
-                               memory=memory, cross_kvs=cross_kvs)
+                               memory=memory, cross_kvs=cross_kvs,
+                               lengths=lengths, prompt_len=prompt_len)
     return logits_from_hidden(params, cfg, h), new_caches

@@ -2,10 +2,17 @@
 
 Decode-shape dry-runs (decode_32k, long_500k) lower exactly the
 ``serve_step`` built here: ONE new token against a seq_len-sized cache.
+
+The whole-request decode loop (:func:`generate`) is a single jitted
+``lax.scan`` with on-device token/logprob accumulation — one host transfer
+at the end, not two per token. :class:`WaveBatcher` is the lock-step
+reference baseline; production serving is
+:class:`repro.serving.batcher.ContinuousBatcher`.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -18,14 +25,37 @@ from repro.models import model as M
 PyTree = Any
 
 
-def load_consensus_params(path: str, cfg: ModelConfig, *, dtype=None) -> PyTree:
+def _param_shardings(cfg: ModelConfig, mesh):
+    """NamedSharding tree for one serving replica spread over the mesh's
+    model axis (worker axes replicate)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import WorkerMesh
+    from repro.launch.shardings import param_pspecs
+
+    wm = WorkerMesh.ensure(mesh)
+    pspecs = param_pspecs(cfg, wm, "allreduce")
+    return jax.tree.map(
+        lambda s: NamedSharding(wm.mesh, s if s is not None else P()),
+        pspecs,
+        is_leaf=lambda x: x is None or isinstance(x, jax.sharding.PartitionSpec))
+
+
+def load_consensus_params(path: str, cfg: ModelConfig, *, dtype=None,
+                          mesh=None) -> PyTree:
     """Decode-ready params from a gossip-trained checkpoint.
 
     The checkpoint may be worker-stacked (every leaf carries the leading M
     dim the decentralized trainer keeps) or already consensus-averaged; the
-    stacked case is restored into an (M, ...) tree and collapsed via
-    ``checkpoint.consensus_params`` — the paper's output model
-    w̄ = (1/M)Σ w_j — before serving."""
+    stacked case is collapsed via ``checkpoint.consensus_params`` — the
+    paper's output model w̄ = (1/M)Σ w_j — before serving.
+
+    Worker-sharded checkpoints (``save_sharded``: one npz per worker) are
+    averaged shard-by-shard on device — at most ONE worker replica on host
+    at a time, the 340B-scale path. With ``mesh`` the result lands directly
+    in model-axis-sharded device buffers (the layout ``make_serve_step``
+    decodes against)."""
     import numpy as np
 
     from repro.models.params import abstract_tree
@@ -36,7 +66,11 @@ def load_consensus_params(path: str, cfg: ModelConfig, *, dtype=None) -> PyTree:
     # pytree is ever allocated (matters at nemotron scale: like + its
     # Mw-stacked variant would be TBs of dead zeros)
     like = abstract_tree(defs, jnp.dtype(dtype or cfg.param_dtype))
+    shardings = _param_shardings(cfg, mesh) if mesh is not None else None
     p = path if path.endswith(".npz") else path + ".npz"
+    import os
+    if not os.path.exists(p) and ckpt_lib._sharded_meta(p) is not None:
+        return ckpt_lib.consensus_from_sharded(p, like, shardings=shardings)
     data = np.load(p)
     # worker-stacked iff stored leaves carry one extra leading dim vs `like`
     # (bf16 leaves are stored as a same-shape uint16 view, so ndim is stable)
@@ -48,8 +82,12 @@ def load_consensus_params(path: str, cfg: ModelConfig, *, dtype=None) -> PyTree:
         Mw = data[f0].shape[0]
         stacked_like = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((Mw,) + s.shape, s.dtype), like)
-        return ckpt_lib.consensus_params(ckpt_lib.restore(path, stacked_like))
-    return ckpt_lib.restore(path, like)
+        out = ckpt_lib.consensus_params(ckpt_lib.restore(path, stacked_like))
+    else:
+        out = ckpt_lib.restore(path, like)
+    if shardings is not None:
+        out = jax.tree.map(jax.device_put, out, shardings)
+    return out
 
 
 def make_serve_step(cfg: ModelConfig):
@@ -71,31 +109,58 @@ class GenerationResult:
     logprobs: np.ndarray      # (B, n_new)
 
 
+@functools.lru_cache(maxsize=64)
+def _gen_loop(cfg: ModelConfig, n_new: int, temperature: float,
+              prompt_len: int, ragged: bool):
+    """One jitted scan per (cfg, n_new, temperature, prompt shape): the whole
+    decode loop runs on device, tokens/logprobs stack in the scan ys."""
+
+    def run(params, logits0, caches, memory, cross_kvs, lengths, key):
+        def body(carry, _):
+            logits, caches, key = carry
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature,
+                                             axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            lpn = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+            logits2, caches = M.decode_step(
+                params, cfg, caches, nxt[:, None].astype(jnp.int32),
+                memory=memory, cross_kvs=cross_kvs,
+                lengths=lengths if ragged else None,
+                prompt_len=prompt_len if ragged else None)
+            return (logits2[:, -1], caches, key), (nxt.astype(jnp.int32), lpn)
+
+        (_, _, _), (toks, lps) = jax.lax.scan(
+            body, (logits0, caches, key), None, length=n_new)
+        return toks.T, lps.T                       # (B, n_new)
+
+    return jax.jit(run)
+
+
 def generate(params, cfg: ModelConfig, prompt: jax.Array, *, n_new: int,
              max_len: int | None = None, temperature: float = 0.0,
-             enc_embeds=None, seed: int = 0) -> GenerationResult:
-    """Prefill the prompt and decode n_new tokens (greedy or sampled)."""
+             enc_embeds=None, seed: int = 0, lengths=None) -> GenerationResult:
+    """Prefill the prompt and decode n_new tokens (greedy or sampled).
+
+    ``lengths`` (B,) marks RIGHT-padded ragged prompts: pad keys are masked
+    out of prefill attention, per-row rope positions continue from each
+    row's real length, and decoding starts from each row's last real token.
+    """
     B, Lp = prompt.shape
     max_len = max_len or (Lp + n_new)
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
     logits, caches, cross_kvs, memory = M.prefill(
-        params, cfg, prompt, max_len=max_len, enc_embeds=enc_embeds)
-    step = jax.jit(make_serve_step(cfg))
-    key = jax.random.PRNGKey(seed)
-    toks, lps = [], []
-    logits = logits[:, -1]
-    for _ in range(n_new):
-        lp = jax.nn.log_softmax(logits, axis=-1)
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        toks.append(np.asarray(nxt))
-        lps.append(np.asarray(jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]))
-        logits, caches = step(params, caches, nxt[:, None].astype(jnp.int32),
-                              memory, cross_kvs)
-        logits = logits[:, -1]
-    return GenerationResult(np.stack(toks, 1), np.stack(lps, 1))
+        params, cfg, prompt, max_len=max_len, enc_embeds=enc_embeds,
+        lengths=lengths)
+    loop = _gen_loop(cfg, int(n_new), float(temperature), Lp,
+                     lengths is not None)
+    toks, lps = loop(params, logits[:, -1], caches, memory, cross_kvs,
+                     lengths, jax.random.PRNGKey(seed))
+    return GenerationResult(np.asarray(toks), np.asarray(lps))
 
 
 @dataclasses.dataclass
@@ -106,11 +171,15 @@ class _Request:
 
 
 class WaveBatcher:
-    """Wave-based batched serving: requests are grouped into fixed-size waves
-    of equal prompt length, prefilled together, and decoded in lock-step
-    (one shared cache position per wave — the KV cache tracks a scalar
-    insertion position, so ragged per-slot admission is out of scope; the
-    scheduler pads prompts to the wave's max length instead).
+    """Wave-based batched serving: requests are grouped into fixed-size waves,
+    RIGHT-padded to the wave's max prompt length, prefilled together, and
+    decoded in lock-step (one shared cache position per wave). Ragged waves
+    pass per-row ``lengths`` so pad positions never leak into attention.
+
+    Kept as the reference baseline — production serving is
+    :class:`repro.serving.batcher.ContinuousBatcher` (per-slot admission
+    over a paged cache). Recurrent archs (ssm/rglru) must batch
+    equal-length prompts (ragged masking can't fix their state pollution).
     """
 
     def __init__(self, params, cfg: ModelConfig, batch_slots: int, max_len: int,
@@ -119,7 +188,6 @@ class WaveBatcher:
         self.B, self.max_len, self.pad_id = batch_slots, max_len, pad_id
         self.queue: list[_Request] = []
         self.done: dict[int, np.ndarray] = {}
-        self._step = jax.jit(make_serve_step(cfg))
         self._rid = 0
 
     def submit(self, prompt: np.ndarray, n_new: int) -> int:
@@ -138,10 +206,13 @@ class WaveBatcher:
         Lp = max(len(r.prompt) for r in wave)
         n_new = max(r.n_new for r in wave)
         prompts = np.full((len(wave), Lp), self.pad_id, np.int32)
-        for i, r in enumerate(wave):  # left-pad so last token is real
-            prompts[i, Lp - len(r.prompt):] = r.prompt
+        for i, r in enumerate(wave):  # right-pad: positions stay 0..len-1
+            prompts[i, :len(r.prompt)] = r.prompt
+        lens = np.array([len(r.prompt) for r in wave], np.int32)
+        ragged = bool((lens != Lp).any())
         res = generate(self.params, self.cfg, jnp.asarray(prompts),
-                       n_new=n_new, max_len=min(self.max_len, Lp + n_new))
+                       n_new=n_new, max_len=min(self.max_len, Lp + n_new),
+                       lengths=lens if ragged else None)
         for i, r in enumerate(wave):
             self.done[r.rid] = res.tokens[i, : r.n_new]
 

@@ -1,0 +1,251 @@
+"""Block-table paged KV cache for the continuous batcher.
+
+Physical storage is one page pool per attention layer: ``(n_pages, page,
+...)`` arrays. Slot ``s``'s logical block ``b`` lives in page
+``block_tables[s, b]``; every layer shares the same logical→physical
+mapping (one allocation per slot covers all layers), so the host-side
+:class:`PagePool` tracks a single table.
+
+The last page of every pool is a reserved DUMP page: retired or
+never-admitted slots point their whole table row at it, so the in-flight
+decode writes those slots still issue can never corrupt a page that has
+been reassigned to another slot. Dump-page contents are garbage by design
+and are never read (per-slot ``lengths`` mask them out of attention).
+
+Admission scatters a (possibly batched) dense prefill cache into the
+admitted slots' pages inside the admission jit; prefill buckets are
+therefore required to be multiples of the page size so a bucket is a
+whole number of blocks.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.attention import PagedKVCache, PagedMLACache
+
+PyTree = Any
+
+
+def paged_unsupported_reason(cfg: ModelConfig) -> str | None:
+    """None if cfg can serve from a paged cache, else why not.
+
+    Recurrent kinds (ssm/rglru) carry per-slot state that pad tokens would
+    pollute, sliding-window attention wants a ring buffer (not a growing
+    paged context), and encoder-decoder serving threads cross-KV the paged
+    decode step doesn't carry. Those archs stay on the WaveBatcher.
+    """
+    if any(k not in ("attn",) for k in cfg.layer_kinds):
+        return f"layer kinds {sorted(set(cfg.layer_kinds))} (paged needs pure attn)"
+    if cfg.window:
+        return "sliding-window attention (ring cache)"
+    if cfg.encoder_layers:
+        return "encoder-decoder cross attention"
+    return None
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    return paged_unsupported_reason(cfg) is None
+
+
+class PagePool:
+    """Host-side page allocator mirroring the device block tables.
+
+    ``n_pages = slots * blocks_per_slot + 1``: enough for every slot to hold
+    ``max_len`` tokens simultaneously, plus the dump page — admission can
+    therefore only fail on a caller bug (over-long request), never on
+    fragmentation.
+    """
+
+    def __init__(self, slots: int, max_len: int, page_size: int):
+        self.page = int(page_size)
+        self.nb = -(-int(max_len) // self.page)       # blocks per slot
+        self.n_pages = slots * self.nb + 1
+        self.dump = self.n_pages - 1
+        self.slots = slots
+        self.reset()
+
+    def reset(self) -> None:
+        self.free: list[int] = list(range(self.n_pages - 1))
+        self.owned: dict[int, list[int]] = {}
+        self.tables = np.full((self.slots, self.nb), self.dump, np.int32)
+
+    def admit(self, slot: int, n_tokens: int) -> np.ndarray:
+        """Allocate pages covering positions [0, n_tokens); returns the new
+        (nb,) table row (unallocated tail entries = dump page)."""
+        if slot in self.owned:
+            raise RuntimeError(f"slot {slot} already admitted")
+        need = -(-int(n_tokens) // self.page)
+        if need > self.nb:
+            raise ValueError(f"{n_tokens} tokens > max_len ({self.nb} blocks)")
+        pages = [self.free.pop() for _ in range(need)]
+        row = np.full((self.nb,), self.dump, np.int32)
+        row[:need] = pages
+        self.tables[slot] = row
+        self.owned[slot] = pages
+        return row
+
+    def retire(self, slot: int) -> None:
+        self.free.extend(self.owned.pop(slot, []))
+        self.tables[slot] = self.dump
+
+
+# ---------------------------------------------------------------------------
+# Device-side cache pytree (mirrors model.init_cache segment structure)
+# ---------------------------------------------------------------------------
+
+
+def _one_layer(cfg: ModelConfig, pool: PagePool, dtype):
+    tables = jnp.full((pool.slots, pool.nb), pool.dump, jnp.int32)
+    lengths = jnp.zeros((pool.slots,), jnp.int32)
+    if cfg.attention_type == "mla":
+        return PagedMLACache(
+            jnp.zeros((pool.n_pages, pool.page, cfg.kv_lora_rank), dtype),
+            jnp.zeros((pool.n_pages, pool.page, cfg.qk_rope_dim), dtype),
+            tables, lengths)
+    shape = (pool.n_pages, pool.page, cfg.n_kv_heads, cfg.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        tables, lengths)
+
+
+def init_paged_caches(cfg: ModelConfig, pool: PagePool) -> PyTree:
+    """Per-layer paged caches (stacked along the scan dim for scanned
+    segments), mirroring ``model.init_cache`` structure."""
+    reason = paged_unsupported_reason(cfg)
+    if reason is not None:
+        raise ValueError(f"paged cache unsupported for this arch: {reason}")
+    dtype = jnp.dtype(cfg.compute_dtype)
+    caches = []
+    for seg in M.plan_segments(cfg):
+        if seg.scanned:
+            one = _one_layer(cfg, pool, dtype)
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (seg.length,) + x.shape),
+                one))
+        else:
+            caches.append([_one_layer(cfg, pool, dtype)
+                           for _ in range(seg.length)])
+    return caches
+
+
+def map_layers(cfg: ModelConfig, caches: PyTree, fn) -> PyTree:
+    """Apply fn(layer_cache, stacked: bool) over the segment structure."""
+    out = []
+    for seg, pc in zip(M.plan_segments(cfg), caches):
+        if seg.scanned:
+            out.append(fn(pc, True))
+        else:
+            out.append([fn(p, False) for p in pc])
+    return out
+
+
+def _scatter_pages(pages, dense_seq, ids, stacked: bool):
+    """Write dense (A, Lb, ...) prefill sequences into pages[ids].
+
+    ids is (A, Lb // page): ONE scatter covers the whole admission group.
+    Lb must equal ids.shape[1] * page. Duplicate dump ids (pad blocks of
+    short prompts, across rows) are fine: the dump page takes whichever
+    block lands last and is never read.
+    """
+    A, nids = ids.shape
+    if stacked:
+        nseg, page = pages.shape[0], pages.shape[2]
+        blocks = dense_seq.reshape(
+            (nseg, A * nids, page) + dense_seq.shape[3:])
+        return pages.at[:, ids.reshape(-1)].set(blocks)
+    page = pages.shape[1]
+    blocks = dense_seq.reshape((A * nids, page) + dense_seq.shape[2:])
+    return pages.at[ids.reshape(-1)].set(blocks)
+
+
+def _set_meta(c, slot, row, length, stacked: bool):
+    """Install table rows + lengths; slot may be a scalar (retire path) or
+    an (A,) group with row (A, nb) / length (A,) (admission path)."""
+    if stacked:
+        tables = c.block_tables.at[:, slot].set(row)
+        lengths = c.lengths.at[:, slot].set(length)
+    else:
+        tables = c.block_tables.at[slot].set(row)
+        lengths = c.lengths.at[slot].set(length)
+    return c._replace(block_tables=tables, lengths=lengths)
+
+
+def scatter_prefill(cfg: ModelConfig, caches: PyTree, dense: PyTree,
+                    slots, ids, rows, lengths) -> PyTree:
+    """Admit a group of A requests: scatter their dense prefill caches into
+    the slots' pages and install each slot's table row + length. Runs inside
+    the admission jit (all args traced; shapes static per (A, bucket)).
+
+    slots/lengths are (A,), ids (A, Lb // page), rows (A, nb).
+    """
+    def one(pair, stacked):
+        pc, dc = pair
+        if isinstance(pc, PagedMLACache):
+            c = pc._replace(
+                ckv_pages=_scatter_pages(pc.ckv_pages, dc.ckv, ids, stacked),
+                kr_pages=_scatter_pages(pc.kr_pages, dc.krope, ids, stacked))
+        else:
+            c = pc._replace(
+                k_pages=_scatter_pages(pc.k_pages, dc.k, ids, stacked),
+                v_pages=_scatter_pages(pc.v_pages, dc.v, ids, stacked))
+        return _set_meta(c, slots, rows, lengths, stacked)
+
+    out = []
+    for seg, pc, dc in zip(M.plan_segments(cfg), caches, dense):
+        if seg.scanned:
+            out.append(one((pc, dc), True))
+        else:
+            out.append([one(pd, False) for pd in zip(pc, dc)])
+    return out
+
+
+def retire_slot(cfg: ModelConfig, caches: PyTree, slot, dump: int) -> PyTree:
+    """Point the slot's table row at the dump page and zero its length —
+    any write the inactive slot still issues lands in garbage, never in a
+    page that may be reassigned."""
+    def one(c, stacked):
+        row = jnp.full(c.block_tables.shape[-1:], dump, jnp.int32)
+        return _set_meta(c, slot, row, jnp.zeros((), jnp.int32), stacked)
+    return map_layers(cfg, caches, one)
+
+
+def bump_lengths(cfg: ModelConfig, caches: PyTree, inc) -> PyTree:
+    """Advance per-slot lengths by inc (S,) int32 — once per decode step,
+    masked to the active slots, AFTER the step's writes (the attention
+    layers themselves never advance lengths)."""
+    return map_layers(
+        cfg, caches, lambda c, stacked: c._replace(lengths=c.lengths + inc))
+
+
+def paged_cache_pspecs(cfg: ModelConfig, mesh) -> PyTree:
+    """PartitionSpecs mirroring init_paged_caches structure: kv heads shard
+    over 'model' when divisible (tables/lengths replicated); MLA's
+    compressed pages have no head dim and stay replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.shardings import _div
+
+    def one(kind: str):
+        if cfg.attention_type == "mla":
+            return PagedMLACache(P(None, None, None), P(None, None, None),
+                                 P(), P())
+        h_ax = _div(cfg.n_kv_heads, mesh, "model")
+        return PagedKVCache(P(None, None, h_ax, None),
+                            P(None, None, h_ax, None), P(), P())
+
+    segs = M.plan_segments(cfg)
+    out = []
+    for seg in segs:
+        spec = one(seg.kind)
+        if seg.scanned:
+            spec = jax.tree.map(lambda p: P(None, *p), spec,
+                                is_leaf=lambda x: isinstance(x, P))
+        else:
+            spec = [one(seg.kind) for _ in range(seg.length)]
+        out.append(spec)
+    return out

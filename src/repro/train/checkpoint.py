@@ -166,6 +166,57 @@ def restore_sharded(path: str, like: PyTree) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def consensus_from_sharded(path: str, like: PyTree, *,
+                           shardings: PyTree | None = None) -> PyTree:
+    """Consensus average w̄ = (1/M)Σ w_j straight from a worker-sharded
+    checkpoint, with at most ONE worker replica on host at a time.
+
+    :func:`restore_sharded` / :func:`export_consensus` stack all M shards on
+    host before averaging — M full replicas of host RAM, a non-starter at
+    340B. Here each shard is opened in turn, its leaves placed on device
+    (against per-leaf ``shardings`` when given, so the result lands directly
+    in the serving layout), cast to fp32 and added into a running sum; the
+    divide by M happens once at the end, then casts back to `like`'s dtypes.
+    Shards accumulate in meta order, so the result is deterministic and
+    matches the full-restore ``consensus_params`` reduction order.
+    """
+    base = _strip_npz(path)
+    meta = _sharded_meta(path)
+    if meta is None:
+        raise FileNotFoundError(f"{base}.meta.json has no shard list")
+    coords = meta["sharded"]["shards"]
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_path_key(pk) for pk, _ in leaves_paths]
+    if shardings is not None:
+        shard_leaves, sh_def = jax.tree_util.tree_flatten(shardings)
+        assert sh_def == treedef, "shardings must mirror `like`"
+    else:
+        shard_leaves = [None] * len(keys)
+    acc: list | None = None
+    stored_by_key: dict[str, str] | None = None
+    for c in coords:
+        with np.load(f"{base}.shard-{c}.npz") as z:
+            if stored_by_key is None:
+                stored_by_key = {_base_key(f): f for f in z.files}
+                assert set(stored_by_key) == set(keys), (
+                    sorted(set(stored_by_key) ^ set(keys))[:5])
+            cur = []
+            for key, (_, leaf), sh in zip(keys, leaves_paths, shard_leaves):
+                stored = stored_by_key[key]
+                raw = z[stored]
+                if stored.endswith(_BF16_TAG):
+                    raw = raw.view(jnp.bfloat16.dtype)
+                assert raw.shape == leaf.shape, (key, raw.shape, leaf.shape)
+                x = jax.device_put(raw, sh) if sh is not None \
+                    else jnp.asarray(raw)
+                cur.append(x.astype(jnp.float32))
+        acc = cur if acc is None else [a + b for a, b in zip(acc, cur)]
+    Mw = jnp.float32(len(coords))
+    out = [(a / Mw).astype(leaf.dtype)
+           for a, (_, leaf) in zip(acc, leaves_paths)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 class AsyncCheckpointWriter:
     """Background checkpoint writer: snapshot on call, ``np.savez`` off-thread.
 

@@ -223,6 +223,112 @@ def test_load_consensus_params_from_exported_sharded(tmp_path):
                                    rtol=1e-5, atol=1e-6)
 
 
+def test_load_consensus_params_dtype_override(tmp_path):
+    """Serving can down-cast at load time: dtype= overrides the config's
+    param dtype for every leaf, on both the stacked and flat paths."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M_
+    from repro.serving.engine import load_consensus_params
+
+    cfg = get_config("granite-3-2b", reduced=True)
+    params = M_.init(jax.random.PRNGKey(0), cfg)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (2,) + x.shape), params)
+    src = os.path.join(tmp_path, "gossip.npz")
+    C.save(src, stacked)
+    loaded = load_consensus_params(src, cfg, dtype=jnp.bfloat16)
+    assert all(x.dtype == jnp.bfloat16 for x in jax.tree.leaves(loaded))
+    # values survive the cast: mean of identical replicas == the replica
+    for a, b in zip(jax.tree.leaves(loaded), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_consensus_from_sharded_one_replica_on_host(tmp_path, monkeypatch):
+    """The 340B-scale restore contract: ``consensus_from_sharded`` opens one
+    shard npz at a time and never materializes the stacked tree on host —
+    and its result agrees with the full-restore consensus to reduction-order
+    rounding (shard-by-shard fp32 accumulation vs jnp.mean over the stack
+    differ by a few ulp)."""
+    import jax
+
+    Mw = 4
+    tree = _stacked_tree(M=Mw, seed=7)
+    per_worker = sum(np.asarray(x[0]).nbytes
+                     for x in (tree["w"], tree["emb"], tree["opt"]["steps"]))
+    path = os.path.join(tmp_path, "spy.npz")
+    C.save_sharded(path, tree)
+
+    real_load = np.load
+    opened = []
+
+    def spy_load(p, *a, **kw):
+        z = real_load(p, *a, **kw)
+        opened.append((os.path.basename(p),
+                       sum(z[f].nbytes for f in z.files)))
+        return z
+
+    monkeypatch.setattr(C.np, "load", spy_load)
+    like = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], x.dtype), tree)
+    mean = C.consensus_from_sharded(path, like)
+    monkeypatch.undo()
+
+    assert len(opened) == Mw
+    assert all("shard-" in name for name, _ in opened)
+    assert max(nbytes for _, nbytes in opened) <= per_worker
+    want = C.consensus_params(tree)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(mean)[0],
+            jax.tree_util.tree_flatten_with_path(want)[0]):
+        assert pa == pb and a.dtype == b.dtype and a.shape == b.shape
+        if jnp.issubdtype(a.dtype, jnp.integer):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), pa
+        else:
+            # a few-ulp fp32 difference may round across a bf16 boundary
+            tol = 1e-2 if a.dtype == jnp.bfloat16 else 1e-6
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=tol, atol=0, err_msg=str(pa))
+
+
+def test_sharded_consensus_decodes_identical_to_full_restore(tmp_path):
+    """Acceptance check: serving params restored shard-by-shard (≤1 worker
+    replica on host) decode bit-identically to the full-restore path.
+    Params agree to reduction-order rounding (1 fp32 ulp); greedy decode on
+    the tiny config is insensitive to that, so TOKENS must match exactly."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import model as M_
+    from repro.serving import generate
+    from repro.serving.engine import load_consensus_params
+
+    cfg = get_config("granite-3-2b", reduced=True)
+    params = M_.init(jax.random.PRNGKey(2), cfg)
+    Mw = 3
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (Mw,) + x.shape) *
+        jnp.arange(1, Mw + 1, dtype=x.dtype).reshape((Mw,) + (1,) * x.ndim),
+        params)
+    src = os.path.join(tmp_path, "gossip.npz")
+    C.save_sharded(src, stacked)
+    p_sharded = load_consensus_params(src, cfg)     # shard-by-shard path
+    flat = os.path.join(tmp_path, "serve.npz")
+    C.export_consensus(src, flat)                    # full-restore path
+    p_full = load_consensus_params(flat, cfg)
+    for a, b in zip(jax.tree.leaves(p_sharded), jax.tree.leaves(p_full)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-7, atol=1e-9)
+    prompt = np.arange(1, 9, dtype=np.int32)[None] % cfg.vocab_size
+    out_a = generate(p_sharded, cfg, prompt, n_new=6, max_len=14)
+    out_b = generate(p_full, cfg, prompt, n_new=6, max_len=14)
+    assert np.array_equal(np.asarray(out_a.tokens), np.asarray(out_b.tokens))
+
+
 # ---------------------------------------------------------------------------
 # Async (background) checkpoint writer
 # ---------------------------------------------------------------------------
